@@ -1,0 +1,43 @@
+"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale only;
+the derived column reports achieved GB/s to compare against the ref path).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, repeats: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats * 1e6     # us
+
+
+def run() -> List[Dict]:
+    n = 1 << 20
+    x = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
+    bufs = jax.random.normal(jax.random.key(1), (8, n // 8), jnp.float32)
+    rows = []
+    cases = [
+        ("quantize_int8_pallas", lambda: ops.quantize_int8(x)[0]),
+        ("quantize_int8_ref", lambda: ref.quantize_int8(x)[0]),
+        ("ternarize_pallas", lambda: ops.ternarize(x)[0]),
+        ("ternarize_ref", lambda: ref.ternarize(x)[0]),
+        ("topk_sparsify_pallas", lambda: ops.topk_sparsify(x, 0.01, sample=4096)),
+        ("fused_add_pallas", lambda: ops.fused_add(bufs)),
+        ("fused_add_ref", lambda: ref.fused_add(bufs)),
+    ]
+    for name, fn in cases:
+        jfn = jax.jit(fn)
+        us = _bench(jfn)
+        gbps = n * 4 / (us / 1e6) / 1e9
+        rows.append(dict(name=name, us_per_call=us, derived=f"{gbps:.2f}GB/s"))
+    return rows

@@ -1,0 +1,122 @@
+"""§Perf hillclimb driver: lower one (arch x shape) on the single-pod mesh
+with config-knob overrides, analyze the compiled HLO, and print the three
+roofline terms — the measurement half of the hypothesis -> change ->
+measure -> validate loop.
+
+  PYTHONPATH=src python -m benchmarks.perf_lab --arch jamba-v0.1-52b \
+      --shape train_4k --set mamba_fused_y=True --tag fused_y
+
+Results are appended to artifacts/perf/<arch>_<shape>.json so iterations
+accumulate into the EXPERIMENTS.md §Perf log.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import gzip
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import specs as specs_lib
+from repro.launch.dryrun import resolve_cfg
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.registry import get_model
+from repro.optim.optimizers import get_optimizer
+from repro.utils.hlo import analyze
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "perf"
+
+_WIRE = {"all-reduce": 2.0}
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def run_variant(arch: str, shape_name: str, overrides: dict, tag: str,
+                verbose: bool = True) -> dict:
+    cfg, note = resolve_cfg(arch, shape_name)
+    assert cfg is not None, f"{arch} x {shape_name} skipped by design"
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh()
+    api = get_model(cfg)
+    opt = get_optimizer("adamw") if shape.kind == "train" else None
+    spec = specs_lib.step_spec(api, shape, mesh, opt)
+    fn = specs_lib.make_step_fn(api, spec.kind, opt)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=spec.in_shardings,
+                           out_shardings=spec.out_shardings,
+                           donate_argnums=spec.donate_argnums
+                           ).lower(*spec.args).compile()
+    text = compiled.as_text()
+    ana = analyze(text)
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    with gzip.open(ARTIFACTS / f"{arch}_{shape_name}_{tag}.hlo.gz", "wt") as f:
+        f.write(text)
+    mem = compiled.memory_analysis()
+    wire = sum(_WIRE.get(k, 1.0) * v for k, v in ana.collective_bytes.items())
+    result = {
+        "tag": tag, "arch": arch, "shape": shape_name,
+        "overrides": overrides, "note": note,
+        "compile_s": round(time.time() - t0, 1),
+        "compute_s": ana.flops / PEAK_FLOPS_BF16,
+        "memory_s": ana.bytes / HBM_BW,
+        "collective_s": wire / ICI_BW,
+        "flops": ana.flops, "bytes": ana.bytes,
+        "collective_bytes": ana.collective_bytes,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+    }
+    if verbose:
+        print(f"[perf] {arch} x {shape_name} [{tag}] "
+              f"compute={result['compute_s']*1e3:.1f}ms "
+              f"memory={result['memory_s']*1e3:.1f}ms "
+              f"collective={result['collective_s']*1e3:.1f}ms "
+              f"temp={result['temp_gib']:.1f}GiB")
+        print(f"       collectives: "
+              f"{ {k: f'{v/1e9:.1f}GB' for k, v in ana.collective_bytes.items()} }")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. mamba_fused_y=True")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    result = run_variant(args.arch, args.shape, parse_overrides(args.set),
+                         args.tag)
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    out = ARTIFACTS / f"{args.arch}_{args.shape}.json"
+    hist = json.loads(out.read_text()) if out.exists() else []
+    hist = [h for h in hist if h["tag"] != args.tag] + [result]
+    out.write_text(json.dumps(hist, indent=1))
+    print(f"-> {out}")
+
+
+if __name__ == "__main__":
+    main()

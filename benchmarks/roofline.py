@@ -1,0 +1,125 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads ``artifacts/dryrun/results.json`` (written by repro.launch.dryrun) and
+derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = wire_bytes_per_device / ICI link bw         [s]
+
+``cost_analysis`` of an SPMD-partitioned module is per-device, so no
+division by chip count is needed.  Collective wire bytes per device are
+derived from the summed *output* shapes of collective ops in the compiled
+HLO: an all-reduce moves ~2x its output over the ring, everything else ~1x
+(the (N-1)/N factor is ~1 at N=16/256).
+
+Also reports MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)
+against HLO FLOPs — the "useful-compute" ratio that catches remat and
+redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def wire_bytes(coll: Dict[str, float]) -> float:
+    return sum(_WIRE_FACTOR.get(k, 1.0) * v for k, v in coll.items())
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    from repro.core.flops import model_flops
+
+    n_dev = rec["devices"]
+    # prefer the loop-trip-aware analysis (repro.utils.hlo.analyze); the raw
+    # cost_analysis numbers count while bodies once and under-report by ~L
+    ana = rec.get("analyzed")
+    if ana:
+        flops, nbytes = ana["flops"], ana["bytes"]
+        coll = ana["collective_bytes"]
+    else:
+        flops, nbytes = rec["flops"], rec["bytes_accessed"]
+        coll = rec.get("collective_bytes", {})
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = nbytes / HBM_BW
+    t_coll = wire_bytes(coll) / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_dev          # useful FLOPs per device
+    ratio = mf / flops if flops else 0.0
+    hbm_gib = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind", ""),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_ratio": ratio,
+        "temp_hbm_gib": hbm_gib,
+        "note": rec.get("note", ""),
+    }
+
+
+def load_table(path: Optional[Path] = None) -> List[Dict]:
+    path = path or (ARTIFACTS / "results.json")
+    recs = json.loads(Path(path).read_text())
+    rows = []
+    for rec in recs:
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh", ""), "kind": "skipped",
+                         "note": rec.get("note", "")})
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+           "| dominant | useful-FLOP ratio | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("kind") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | skipped | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+            f"| {r['model_flops_ratio']:.2f} | {r['temp_hbm_gib']:.1f} |\n")
+    return "".join(out)
+
+
+def main(path: Optional[str] = None):
+    rows = load_table(Path(path) if path else None)
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_flop_ratio,temp_hbm_gib")
+    for r in rows:
+        if r.get("kind") == "skipped":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},,,,skipped,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']*1e3:.3f},{r['memory_s']*1e3:.3f},"
+              f"{r['collective_s']*1e3:.3f},{r['dominant']},"
+              f"{r['model_flops_ratio']:.3f},{r['temp_hbm_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,96 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Sections:
+  1. Paper figures/tables (fig1-fig8 + transmission table) with validation
+     checks against the paper's own numbers.
+  2. Kernel micro-benchmarks (Pallas interpret-mode vs jnp ref).
+  3. TPU what-if for the assigned architectures (beyond-paper).
+  4. Roofline table from the dry-run artifacts, if present.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark plus a validation
+summary; exits non-zero if a paper-claim check fails.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> int:
+    failures = 0
+
+    # -- 1. paper figures ---------------------------------------------------
+    from benchmarks.figures import ALL_FIGURES
+    print("=" * 72)
+    print("SECTION 1: paper figure reproductions (what-if simulator)")
+    print("=" * 72)
+    for name, fn in ALL_FIGURES.items():
+        rows, val = fn()
+        us = val.pop("us", 0.0)
+        ok = all(bool(v) for v in val.values())
+        failures += 0 if ok else 1
+        print(f"\n{name},{us:.0f},{'PASS' if ok else 'FAIL'}")
+        for k, v in val.items():
+            print(f"  check {k}: {'ok' if v else 'FAIL'}")
+        for r in rows[:6]:
+            print(f"  {r}")
+        if len(rows) > 6:
+            print(f"  ... ({len(rows)} rows total)")
+
+    # -- 2. kernels -----------------------------------------------------------
+    print("\n" + "=" * 72)
+    print("SECTION 2: kernel micro-benchmarks (interpret mode on CPU)")
+    print("=" * 72)
+    from benchmarks.kernel_bench import run as kernel_run
+    print("name,us_per_call,derived")
+    for r in kernel_run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+
+    # -- 3. TPU what-if -------------------------------------------------------
+    print("\n" + "=" * 72)
+    print("SECTION 3: TPU what-if for assigned architectures (beyond-paper)")
+    print("=" * 72)
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.core.whatif import tpu_whatif
+    shape = INPUT_SHAPES["train_4k"]
+    print("name,us_per_call,derived")
+    for arch in ("stablelm-3b", "command-r-35b", "deepseek-coder-33b",
+                 "rwkv6-1.6b", "jamba-v0.1-52b", "moonshot-v1-16b-a3b"):
+        for n_pods in (1, 2):
+            r = tpu_whatif(get_config(arch), shape, n_pods=n_pods)
+            print(f"tpu_whatif[{arch},pods={n_pods}],0,"
+                  f"f_sim={r.scaling_factor:.3f};overhead_ms="
+                  f"{r.t_overhead*1e3:.2f}")
+
+    # -- 4. roofline ----------------------------------------------------------
+    print("\n" + "=" * 72)
+    print("SECTION 4: roofline from dry-run artifacts")
+    print("=" * 72)
+    art = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+    from benchmarks.roofline import load_table
+    for fname in ("results.json", "results_multipod.json"):
+        path = art / fname
+        if not path.exists():
+            print(f"({fname} not present — run repro.launch.dryrun first)")
+            continue
+        rows = load_table(path)
+        print(f"\n-- {fname}: {len(rows)} combos --")
+        print("name,us_per_call,derived")
+        for r in rows:
+            if r.get("kind") == "skipped":
+                print(f"roofline[{r['arch']},{r['shape']}],0,skipped")
+                continue
+            print(f"roofline[{r['arch']},{r['shape']},{r['mesh']}],0,"
+                  f"dominant={r['dominant']};compute_ms={r['compute_s']*1e3:.2f};"
+                  f"memory_ms={r['memory_s']*1e3:.2f};"
+                  f"collective_ms={r['collective_s']*1e3:.2f};"
+                  f"useful_ratio={r['model_flops_ratio']:.2f}")
+
+    print(f"\n{'ALL BENCHMARKS PASS' if failures == 0 else f'{failures} FAILURES'}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,40 @@
+"""Gradient-compression training demo (paper §3.2 as a runtime feature).
+
+Trains the same smoke model under every compression mode of the explicit
+(Horovod-style) communication phase and compares loss trajectories: the
+paper's point is that compression trades model quality for wire time, so
+you should only pay for it on slow networks.
+
+Run:  PYTHONPATH=src python examples/gradient_compression.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_mod
+
+
+def main():
+    results = {}
+    for compression in ("none", "fp16", "int8", "topk"):
+        res = train_mod.main([
+            "--arch", "stablelm-3b", "--smoke", "--steps", "10",
+            "--comm-mode", "explicit", "--compression", compression,
+            "--topk-ratio", "0.25", "--log-every", "100"])
+        results[compression] = res
+
+    print(f"\n{'mode':<8} {'loss_0':>8} {'loss_N':>8} {'decreased':>10}")
+    base = results["none"]["last_loss"]
+    for mode, r in results.items():
+        print(f"{mode:<8} {r['first_loss']:>8.4f} {r['last_loss']:>8.4f} "
+              f"{str(r['loss_decreased']):>10}")
+        assert r["loss_decreased"], f"{mode}: loss must decrease"
+    # lossless/lossy ordering sanity: fp16 tracks none closely
+    assert abs(results["fp16"]["last_loss"] - base) < 0.15
+    print("\nAll compression modes converge; fp16 tracks the uncompressed "
+          "trajectory (paper: lossy compression is the only mode that "
+          "risks model quality — use it only when the wire demands it).")
+
+
+if __name__ == "__main__":
+    main()

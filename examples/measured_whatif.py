@@ -1,0 +1,62 @@
+"""White-box measured what-if: the paper's §3.1 methodology end-to-end on
+an *executable* workload.
+
+1. Time a real training step of (a width-reduced) VGG-16 on this device.
+2. Build the gradient-ready timeline from the measured batch time with
+   per-layer FLOPs-proportional backward shares (the paper distributes
+   hook timings the same way).
+3. Run the two-process simulator across bandwidths.
+
+Run:  PYTHONPATH=src python examples/measured_whatif.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simulator import simulate
+from repro.core.timeline import from_cnn
+from repro.core.transport import GBPS
+from repro.models.cnn import cnn_loss, get_cnn
+
+
+def measure_step(name="vgg16", width_mult=0.25, batch=4, repeats=3) -> float:
+    params, forward = get_cnn(name, jax.random.key(0), num_classes=100,
+                              width_mult=width_mult)
+    batch_data = {
+        "images": jax.random.normal(jax.random.key(1), (batch, 224, 224, 3)),
+        "labels": jnp.zeros((batch,), jnp.int32),
+    }
+    step = jax.jit(jax.grad(lambda p: cnn_loss(forward, p, batch_data)))
+    jax.block_until_ready(step(params))          # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(step(params))
+    return (time.perf_counter() - t0) / repeats
+
+
+def main():
+    t_local = measure_step()
+    print(f"measured reduced-VGG16 step on {jax.default_backend()}: "
+          f"{t_local*1e3:.0f} ms")
+    # the timeline uses the *shape* of the measurement (the paper's V100
+    # batch time for absolute numbers; our measured time demonstrates the
+    # white-box pipeline on live hardware)
+    for label, t_batch in [("paper-V100", None), ("this-device", t_local)]:
+        tl = from_cnn("vgg16", t_batch=t_batch)
+        line = f"  {label:<12}"
+        for bw in (10, 25, 100):
+            r = simulate(tl, n_workers=64, bandwidth=bw * GBPS,
+                         transport="ideal")
+            line += f"  {bw:>3}Gbps={r.scaling_factor:.1%}"
+        print(line)
+    print("\nSlower compute (this device) hides more communication -> higher "
+          "scaling factor at equal bandwidth,\nexactly the compute/comm "
+          "balance the paper's what-if captures.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: the paper's question — *is the network the bottleneck?* —
+answered end-to-end with this framework in under a minute on CPU.
+
+1. Build the paper's three CNN workloads' gradient timelines.
+2. Run the what-if simulator at measured-transport vs full utilization.
+3. Reproduce the headline numbers: scaling plateaus at high bandwidth under
+   the measured transport, but reaches ~100 % under full utilization, and
+   2-5x compression suffices at 10 Gbps.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import whatif
+from repro.core.whatif import sim_scaling
+
+
+def main():
+    print("=" * 72)
+    print("Paper reproduction: 'Is Network the Bottleneck of Distributed "
+          "Training?'")
+    print("=" * 72)
+
+    print("\n-- transmission time of all parameters at 100 Gbps "
+          "(paper: 7.8 / 13.6 / 42.2 ms) --")
+    for row in whatif.transmission_table():
+        print(f"  {row['model']:<10} {row['size_mb']:6.1f} MB  "
+              f"{row['time_ms']:5.1f} ms")
+
+    print("\n-- scaling factor, 8 servers (64 GPUs) --")
+    print(f"  {'model':<10} {'bw':>6} {'measured-mode':>14} {'full-util':>10}")
+    for model in whatif.PAPER_MODELS:
+        for bw in (10, 25, 100):
+            meas = sim_scaling(model, bandwidth_gbps=bw,
+                               transport="horovod_tcp").scaling_factor
+            ideal = sim_scaling(model, bandwidth_gbps=bw,
+                                transport="ideal").scaling_factor
+            print(f"  {model:<10} {bw:>4}G {meas:>13.1%} {ideal:>10.1%}")
+
+    print("\n-- gradient compression at 10 Gbps, full utilization "
+          "(paper: 2-5x is enough; VGG16 needs ~10x) --")
+    for model in whatif.PAPER_MODELS:
+        line = f"  {model:<10}"
+        for ratio in (1, 2, 5, 10):
+            f = sim_scaling(model, bandwidth_gbps=10, transport="ideal",
+                            compression_ratio=ratio).scaling_factor
+            line += f"  {ratio}x={f:.1%}"
+        print(line)
+
+    print("\nConclusion (paper §4): with the network fully utilized the "
+          "scaling factor is ~100% at 100 Gbps —\nthe bottleneck is the "
+          "transport implementation, not the network speed.")
+
+
+if __name__ == "__main__":
+    main()

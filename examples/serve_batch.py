@@ -1,0 +1,21 @@
+"""Batched serving example: prefill a prompt batch and decode continuations
+for three architecture families (dense GQA, attention-free RWKV6, enc-dec
+Whisper) through the same ModelApi.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ("stablelm-3b", "rwkv6-1.6b", "whisper-base"):
+        serve_mod.main(["--arch", arch, "--smoke", "--batch", "2",
+                        "--prompt-len", "32", "--gen", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Beyond-paper example: the paper's what-if analysis transplanted to the
+TPU-v5e production mesh for the assigned architectures.
+
+Asks the paper's question about *our* system: for data-parallel training of
+each architecture on a 16x16 pod (and 2 pods over DCN), is the interconnect
+the bottleneck, and what compression ratio (if any) would full utilization
+need?
+
+Run:  PYTHONPATH=src python examples/whatif_tpu.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.whatif import tpu_whatif
+
+
+def main():
+    shape = INPUT_SHAPES["train_4k"]
+    archs = ["stablelm-3b", "command-r-35b", "deepseek-coder-33b",
+             "rwkv6-1.6b", "moonshot-v1-16b-a3b"]
+    print(f"{'arch':<22} {'pods':>4} {'comp':>5} {'f_sim':>7} {'overhead':>9}")
+    for arch in archs:
+        cfg = get_config(arch)
+        for n_pods in (1, 2):
+            for ratio in (1.0, 4.0):
+                r = tpu_whatif(cfg, shape, n_pods=n_pods,
+                               compression_ratio=ratio)
+                print(f"{arch:<22} {n_pods:>4} {ratio:>4.0f}x "
+                      f"{r.scaling_factor:>6.1%} {r.t_overhead*1e3:>7.2f}ms")
+    print("\nReading: ICI at 400 Gbps keeps data-parallel gradient sync "
+          "near-invisible for <=35B dense\nmodels; the cross-pod DCN stage "
+          "is where compression starts to matter (paper's 10 Gbps regime).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Dependency-free pytree checkpointing."""
+from repro.checkpoint.store import latest_step, restore, save  # noqa: F401

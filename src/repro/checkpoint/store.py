@@ -1,0 +1,85 @@
+"""Pytree checkpointing without external dependencies.
+
+Layout: a directory per step with one ``.npy`` file per leaf plus a JSON
+manifest of the tree structure and dtypes.  Restore is shape/dtype checked
+against a template tree.  Works for params and optimizer state alike; in a
+multi-host deployment each host saves its addressable shards (here: the
+single host saves everything).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(directory: str | Path, tree: Any, step: int) -> Path:
+    d = Path(directory) / f"step_{step:08d}"
+    tmp = d.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {}
+    for i, (name, leaf) in enumerate(_flatten_with_names(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":        # numpy can't serialize bf16: store bits
+            np.save(tmp / fname, arr.view(np.uint16))
+        else:
+            np.save(tmp / fname, arr)
+        manifest[name] = {"file": fname, "shape": list(arr.shape),
+                          "dtype": dtype}
+    (tmp / "manifest.json").write_text(json.dumps({"step": step,
+                                                   "leaves": manifest}))
+    if d.exists():
+        shutil.rmtree(d)
+    tmp.rename(d)
+    return d
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*")
+                   if p.is_dir())
+    return steps[-1] if steps else None
+
+
+def restore(directory: str | Path, template: Any, step: Optional[int] = None
+            ) -> Any:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+    named = _flatten_with_names(template)
+    leaves = []
+    for name, tmpl in named:
+        ent = manifest[name]
+        arr = np.load(d / ent["file"])
+        if ent["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16.dtype)
+        if list(arr.shape) != list(tmpl.shape):
+            raise ValueError(f"{name}: checkpoint shape {arr.shape} != "
+                             f"template {tmpl.shape}")
+        leaves.append(jnp.asarray(arr, dtype=tmpl.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

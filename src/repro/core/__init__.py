@@ -1,0 +1,3 @@
+"""The paper's primary contribution: scaling-factor methodology, gradient
+timelines, the two-process what-if simulator, transport curves, all-reduce
+cost models, and the per-figure what-if API."""

@@ -1,0 +1,76 @@
+"""AddEst — the paper's element-wise vector-add timing model.
+
+The paper measures vector-add latency on a V100 across sizes and linearly
+interpolates.  We provide:
+
+- ``AddEst.from_bandwidth``: analytic model ``t(x) = alpha + 3x / mem_bw``
+  (read two operands + write one) — used with V100 (900 GB/s) for the
+  faithful reproduction and with TPU v5e HBM (819 GB/s) for the TPU mode;
+- ``AddEst.measure``: empirical measurement on the local host (jnp adds),
+  mirroring the paper's white-box methodology, with linear interpolation
+  between measured sizes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Sequence, Tuple
+
+import numpy as np
+
+V100_MEM_BW = 900e9
+V100_LAUNCH_OVERHEAD = 5e-6      # CUDA kernel launch latency
+TPU_V5E_MEM_BW = 819e9
+TPU_LAUNCH_OVERHEAD = 1e-6
+
+
+@dataclass(frozen=True)
+class AddEst:
+    """Piecewise-linear interpolated time (seconds) of adding two vectors of
+    ``x`` bytes each."""
+
+    sizes: Tuple[float, ...]          # bytes
+    times: Tuple[float, ...]          # seconds
+
+    def __call__(self, x: float) -> float:
+        if x <= 0:
+            return 0.0
+        return float(np.interp(x, self.sizes, self.times))
+
+    # -- constructors --------------------------------------------------------
+
+    @staticmethod
+    def from_bandwidth(mem_bw: float, overhead: float = 0.0,
+                       max_bytes: float = 1 << 33) -> "AddEst":
+        sizes = np.logspace(0, np.log10(max_bytes), 64)
+        times = overhead + 3.0 * sizes / mem_bw
+        return AddEst(tuple(sizes), tuple(times))
+
+    @staticmethod
+    def v100() -> "AddEst":
+        return AddEst.from_bandwidth(V100_MEM_BW, V100_LAUNCH_OVERHEAD)
+
+    @staticmethod
+    def tpu_v5e() -> "AddEst":
+        return AddEst.from_bandwidth(TPU_V5E_MEM_BW, TPU_LAUNCH_OVERHEAD)
+
+    @staticmethod
+    def measure(sizes: Sequence[int] = (1 << 12, 1 << 16, 1 << 20, 1 << 23,
+                                        1 << 26), repeats: int = 5) -> "AddEst":
+        """Empirical local measurement (paper §3.1 methodology)."""
+        import jax
+        import jax.numpy as jnp
+
+        add = jax.jit(lambda a, b: a + b)
+        out_s, out_t = [], []
+        for nbytes in sizes:
+            n = max(nbytes // 4, 1)
+            a = jnp.ones((n,), jnp.float32)
+            b = jnp.ones((n,), jnp.float32)
+            add(a, b).block_until_ready()          # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                add(a, b).block_until_ready()
+            out_s.append(float(nbytes))
+            out_t.append((time.perf_counter() - t0) / repeats)
+        return AddEst(tuple(out_s), tuple(out_t))

@@ -1,0 +1,143 @@
+"""All-reduce cost models (the paper's §3.1 transmission/reduction model,
+plus TPU-topology extensions).
+
+Paper model (flat ring, reduce-scatter + all-gather):
+    transmission(S, N, bw) = (2 * S * (N - 1) / N) / bw
+    reduction(S, N)        = (N - 1) * AddEst(S / N)
+
+Sizes in bytes, bandwidth in bytes/s, times in seconds.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.addest import AddEst
+
+
+def ring_transmission_time(size: int, n: int, bw: float) -> float:
+    """Paper's transmission term for a flat N-worker ring all-reduce."""
+    if n <= 1:
+        return 0.0
+    return (2.0 * size * (n - 1) / n) / bw
+
+
+def ring_reduction_time(size: int, n: int, addest: AddEst) -> float:
+    """Paper's vector-add term: (N-1) adds of S/N-sized chunks."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) * addest(size / n)
+
+
+@dataclass(frozen=True)
+class RingAllReduce:
+    """The paper's cost model: flat ring over ``n`` workers at ``bw`` B/s."""
+
+    n: int
+    bw: float
+    addest: AddEst
+    compression_ratio: float = 1.0   # paper §3.2: divides transmission only
+    compress_reduction: bool = False # extended mode: also scales vector-adds
+
+    def time(self, size: int) -> float:
+        t = ring_transmission_time(size, self.n, self.bw) / self.compression_ratio
+        red = ring_reduction_time(size, self.n, self.addest)
+        if self.compress_reduction:
+            red /= self.compression_ratio
+        return t + red
+
+
+@dataclass(frozen=True)
+class HierarchicalAllReduce:
+    """TPU multi-pod extension: reduce-scatter inside the pod on ICI,
+    all-reduce across pods on DCN, all-gather inside the pod.
+
+    in-pod RS:   S*(nd-1)/nd / ici
+    cross-pod AR: 2*(S/nd)*(np-1)/np / dcn
+    in-pod AG:   S*(nd-1)/nd / ici
+    adds: (nd-1) chunk adds in RS + (np-1) adds of S/nd across pods.
+    """
+
+    n_pod_devices: int               # chips participating per pod (data axis)
+    n_pods: int
+    ici_bw: float
+    dcn_bw: float
+    addest: AddEst
+    compression_ratio: float = 1.0   # applied to the cross-pod (DCN) stage
+
+    def time(self, size: int) -> float:
+        nd, np_ = self.n_pod_devices, self.n_pods
+        t = 0.0
+        if nd > 1:
+            t += 2.0 * size * (nd - 1) / nd / self.ici_bw
+            t += (nd - 1) * self.addest(size / nd)
+        if np_ > 1:
+            shard = size / max(nd, 1)
+            t += (2.0 * shard * (np_ - 1) / np_ / self.dcn_bw) / self.compression_ratio
+            t += (np_ - 1) * self.addest(shard / np_)
+        return t
+
+
+@dataclass(frozen=True)
+class SwitchMLAllReduce:
+    """Paper §4 what-if: in-network aggregation (SwitchML).
+
+    The programmable switch sums gradient chunks in flight: each worker
+    streams its S bytes up while receiving aggregated bytes back on the
+    full-duplex link — wire time ~S/bw independent of N (the ~2x over ring
+    the SwitchML paper reports) — and the vector adds happen in the switch
+    pipeline (no worker-side AddEst term).
+    """
+
+    n: int
+    bw: float
+    addest: AddEst                    # unused; kept for interface parity
+    compression_ratio: float = 1.0
+
+    def time(self, size: int) -> float:
+        if self.n <= 1:
+            return 0.0
+        return (size / self.bw) / self.compression_ratio
+
+
+@dataclass(frozen=True)
+class TwoTierParamServer:
+    """Paper §4 what-if: parameter-server strategy.
+
+    Each worker pushes S bytes to (sharded) servers and pulls S back:
+    2*S/bw on the worker link, but the *server* ingests N shards — with
+    servers co-located on the N workers (sharded PS), per-server ingest is
+    S/N * N = S, so the bottleneck link carries 2*S*(N-1)/N plus the
+    worker-side adds on its 1/N shard, matching ring cost asymptotically
+    (the paper's reason for treating all-reduce as representative).
+    """
+
+    n: int
+    bw: float
+    addest: AddEst
+    compression_ratio: float = 1.0
+
+    def time(self, size: int) -> float:
+        if self.n <= 1:
+            return 0.0
+        wire = (2.0 * size * (self.n - 1) / self.n / self.bw)
+        return wire / self.compression_ratio + self.addest(size / self.n) * (self.n - 1)
+
+
+def make_cost_model(n: int, bw: float, addest: AddEst, *,
+                    topology: str = "ring", n_pods: int = 1,
+                    dcn_bw: Optional[float] = None,
+                    compression_ratio: float = 1.0,
+                    compress_reduction: bool = False):
+    if topology == "ring":
+        return RingAllReduce(n, bw, addest, compression_ratio, compress_reduction)
+    if topology == "hierarchical":
+        return HierarchicalAllReduce(n // n_pods, n_pods, bw,
+                                     dcn_bw or bw / 2, addest,
+                                     compression_ratio)
+    if topology == "switchml":
+        return SwitchMLAllReduce(n, bw, addest, compression_ratio)
+    if topology == "param_server":
+        return TwoTierParamServer(n, bw, addest, compression_ratio)
+    raise ValueError(topology)

@@ -1,0 +1,149 @@
+"""The paper's §3.1 what-if simulator.
+
+Two logical processes communicate through a queue:
+
+- the **backward process** replays the gradient-ready timeline and batches
+  gradients into a Horovod-style fusion buffer (64 MB size limit OR 5 ms
+  timeout from the first pending gradient, whichever fires first);
+- the **all-reduce process** serves flushed buckets FIFO and serialized,
+  each costing transmission + reduction per the plugged-in cost model
+  (ring reduce-scatter/all-gather by default; hierarchical TPU optional).
+
+Outputs: t_sync, t_overhead = max(0, t_sync - t_back), and
+f_sim = t_batch / (t_batch + t_overhead)   (paper Eq. in §3.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.configs.base import CommConfig
+from repro.core.addest import AddEst
+from repro.core.network_model import (HierarchicalAllReduce, RingAllReduce,
+                                      ring_transmission_time)
+from repro.core.timeline import GradTimeline
+from repro.core.transport import Transport, get_transport
+
+
+@dataclass(frozen=True)
+class Bucket:
+    flush_time: float        # when the backward process hands it over
+    size: float              # bytes
+    n_tensors: int = 1       # gradient tensors fused into this bucket
+    start: float = 0.0       # all-reduce start (filled by the server loop)
+    end: float = 0.0
+
+
+@dataclass(frozen=True)
+class SimResult:
+    name: str
+    n_workers: int
+    bandwidth: float                  # physical link bandwidth, bytes/s
+    effective_bw: float               # after the transport curve
+    t_batch: float
+    t_back: float
+    t_sync: float
+    t_overhead: float
+    scaling_factor: float
+    buckets: Tuple[Bucket, ...]
+    wire_bytes_per_worker: float      # actual bytes each worker moved
+    network_utilization: float        # avg wire throughput / physical bw
+
+    def summary(self) -> str:
+        return (f"{self.name}: n={self.n_workers} bw={self.bandwidth*8/1e9:.0f}Gbps "
+                f"f_sim={self.scaling_factor:.3f} overhead={self.t_overhead*1e3:.1f}ms "
+                f"util={self.network_utilization:.2f}")
+
+
+def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
+    """The backward process: fusion-buffer batching of the gradient stream.
+
+    Faithful to Horovod semantics as described in the paper: a bucket is
+    flushed when it reaches the size limit, or when ``timeout_ms`` has
+    elapsed since its first pending gradient.  The tail bucket flushes when
+    the last gradient arrives (backward completion ends the cycle — Horovod
+    does not idle out the final timeout window).
+    """
+    limit = comm.fusion_buffer_mb * 1024 * 1024
+    timeout = comm.timeout_ms / 1e3
+    buckets: List[Bucket] = []
+    pending, n_pend = 0.0, 0
+    first_t: Optional[float] = None
+
+    for t, size in zip(timeline.ready_times, timeline.sizes):
+        if first_t is not None and t > first_t + timeout:
+            buckets.append(Bucket(first_t + timeout, pending, n_pend))
+            pending, n_pend, first_t = 0.0, 0, None
+        if first_t is None:
+            first_t = t
+        pending += size
+        n_pend += 1
+        while pending >= limit:
+            # a gradient larger than the buffer flushes in `limit` slabs
+            buckets.append(Bucket(t, min(pending, limit), max(n_pend, 1)))
+            pending -= min(pending, limit)
+            n_pend = 0
+            first_t = None if pending == 0.0 else t
+    if pending > 0.0 and first_t is not None:
+        buckets.append(Bucket(timeline.t_back, pending, n_pend))
+    return buckets
+
+
+def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
+             comm: Optional[CommConfig] = None,
+             transport: str | Transport = "ideal",
+             addest: Optional[AddEst] = None,
+             compression_ratio: float = 1.0,
+             topology: str = "ring", n_pods: int = 1,
+             dcn_bandwidth: Optional[float] = None) -> SimResult:
+    """Run the two-process simulation for one iteration.
+
+    ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
+    bandwidth (the paper's measured-vs-ideal axis).
+    """
+    comm = comm or CommConfig()
+    addest = addest or AddEst.v100()
+    tr = get_transport(transport) if isinstance(transport, str) else transport
+    eff_bw = tr.effective(bandwidth)
+
+    if topology == "hierarchical":
+        cost = HierarchicalAllReduce(
+            n_pod_devices=n_workers // n_pods, n_pods=n_pods,
+            ici_bw=eff_bw, dcn_bw=tr.effective(dcn_bandwidth or bandwidth / 2),
+            addest=addest, compression_ratio=compression_ratio)
+    elif topology == "ring":
+        cost = RingAllReduce(n_workers, eff_bw, addest, compression_ratio)
+    else:
+        from repro.core.network_model import make_cost_model
+        cost = make_cost_model(n_workers, eff_bw, addest, topology=topology,
+                               compression_ratio=compression_ratio)
+
+    buckets = fuse_buckets(timeline, comm)
+
+    # the all-reduce process: FIFO, one collective in flight at a time
+    served: List[Bucket] = []
+    prev_end = 0.0
+    busy = 0.0
+    for b in buckets:
+        start = max(b.flush_time, prev_end)
+        dur = cost.time(b.size) + tr.per_tensor_overhead * b.n_tensors
+        prev_end = start + dur
+        busy += dur
+        served.append(Bucket(b.flush_time, b.size, b.n_tensors, start, prev_end))
+
+    t_sync = served[-1].end if served else timeline.t_back
+    t_overhead = max(0.0, t_sync - timeline.t_back)
+    f_sim = timeline.t_batch / (timeline.t_batch + t_overhead)
+
+    wire = sum(ring_transmission_time(b.size, n_workers, 1.0)  # bytes at bw=1
+               for b in served) / max(compression_ratio, 1e-9)
+    # utilization while the all-reduce process is busy (paper Fig. 4 measures
+    # real-time NIC throughput during the communication phase)
+    util = (wire / busy) / bandwidth if busy > 0 else 0.0
+
+    return SimResult(
+        name=timeline.name, n_workers=n_workers, bandwidth=bandwidth,
+        effective_bw=eff_bw, t_batch=timeline.t_batch, t_back=timeline.t_back,
+        t_sync=t_sync, t_overhead=t_overhead, scaling_factor=f_sim,
+        buckets=tuple(served), wire_bytes_per_worker=wire,
+        network_utilization=min(util, 1.0))

@@ -1,0 +1,125 @@
+"""Gradient-ready timelines — the white-box timing input to the simulator.
+
+The paper instruments training scripts with per-parameter hooks to log
+*gradient-computation-done* times.  We build the same timeline three ways:
+
+- ``from_layer_profile``: analytic — distribute a known batch time across
+  layers proportional to FLOPs (paper CNNs on V100, our archs on v5e);
+- ``from_cnn``: the paper's three workloads;
+- ``from_transformer``: any assigned architecture x input shape, using the
+  per-layer parameter/FLOP model in ``repro.core.flops``;
+- ``measure``: empirical smoke-scale timing on the local device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cnn_profiles import CNNProfile, get_profile
+
+# fraction of compute time spent in backward (2x fwd FLOPs for matmul nets)
+BWD_FRACTION = 2.0 / 3.0
+
+
+@dataclass(frozen=True)
+class GradTimeline:
+    """Backward-pass gradient availability schedule.
+
+    ``ready_times[i]`` (seconds from backward start, ascending) is when
+    gradient chunk i (``sizes[i]`` bytes) becomes available; ``t_back`` is
+    backward completion, ``t_batch`` the full fwd+bwd iteration time.
+    """
+
+    name: str
+    ready_times: Tuple[float, ...]
+    sizes: Tuple[float, ...]
+    t_back: float
+    t_batch: float
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.sizes))
+
+
+def from_layer_profile(name: str, layer_bytes: Sequence[float],
+                       layer_bwd_times: Sequence[float],
+                       t_batch: float) -> GradTimeline:
+    """layer_bytes / layer_bwd_times in *forward* order."""
+    assert len(layer_bytes) == len(layer_bwd_times)
+    n = len(layer_bytes)
+    # backward visits layers last -> first
+    ready, sizes = [], []
+    t = 0.0
+    for i in reversed(range(n)):
+        t += layer_bwd_times[i]
+        ready.append(t)
+        sizes.append(float(layer_bytes[i]))
+    return GradTimeline(name, tuple(ready), tuple(sizes), t_back=t,
+                        t_batch=float(t_batch))
+
+
+def from_cnn(name: str, t_batch: Optional[float] = None,
+             grad_dtype_bytes: int = 4) -> GradTimeline:
+    """Timeline for resnet50 / resnet101 / vgg16 on a V100 (paper setup)."""
+    prof: CNNProfile = get_profile(name)
+    tb = t_batch if t_batch is not None else prof.t_batch_v100
+    flops = np.array([l.flops for l in prof.layers], dtype=np.float64)
+    total = flops.sum()
+    # layers with zero conv FLOPs (bn) get a tiny epsilon share
+    share = (flops + 1e-9 * total) / (flops + 1e-9 * total).sum()
+    bwd_times = share * (tb * BWD_FRACTION)
+    layer_bytes = [l.params * grad_dtype_bytes for l in prof.layers]
+    return from_layer_profile(prof.name, layer_bytes, bwd_times, tb)
+
+
+def from_transformer(cfg, shape, *, mfu: float = 0.4,
+                     chip_flops: float = 197e12, n_chips_compute: int = 1,
+                     grad_dtype_bytes: int = 2) -> GradTimeline:
+    """Timeline for an assigned architecture on TPU v5e.
+
+    ``n_chips_compute`` divides the per-layer compute time (model-parallel
+    group size); gradient sizes are the *per-replica* gradient bytes.
+    """
+    from repro.core.flops import layer_breakdown
+
+    layers = layer_breakdown(cfg, shape)     # [(name, params, fwd_flops)]
+    eff = mfu * chip_flops * n_chips_compute
+    fwd_times = np.array([l[2] for l in layers], dtype=np.float64) / eff
+    t_fwd = fwd_times.sum()
+    bwd_times = 2.0 * fwd_times
+    t_batch = float(t_fwd + bwd_times.sum())
+    layer_bytes = [l[1] * grad_dtype_bytes for l in layers]
+    return from_layer_profile(f"{cfg.name}:{shape.name}", layer_bytes,
+                              bwd_times, t_batch)
+
+
+def measure(api, cfg, batch, repeats: int = 3) -> GradTimeline:
+    """Empirical smoke-scale timeline on the local device.
+
+    JAX has no per-layer backward hooks (the graph is compiled), so we time
+    the full fwd+bwd and distribute backward time across layers proportional
+    to analytic FLOPs — the same shape of data the paper logs, measured at
+    the granularity XLA exposes.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.core.flops import layer_breakdown_from_params
+
+    step = jax.jit(lambda p, b: jax.grad(lambda q: api.loss_fn(q, b)[0])(p))
+    params = api.init(jax.random.key(0))
+    g = step(params, batch)
+    jax.block_until_ready(g)
+    t0 = _time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(step(params, batch))
+    t_batch = (_time.perf_counter() - t0) / repeats
+    layers = layer_breakdown_from_params(params, cfg)
+    fl = np.array([l[2] for l in layers], dtype=np.float64)
+    share = (fl + 1e-9 * fl.sum()) / (fl + 1e-9 * fl.sum()).sum()
+    bwd = share * t_batch * BWD_FRACTION
+    layer_bytes = [l[1] * 4 for l in layers]
+    return from_layer_profile(f"{cfg.name}-measured", layer_bytes, bwd, t_batch)

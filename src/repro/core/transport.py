@@ -1,0 +1,72 @@
+"""Network-transport models: how much of the physical bandwidth the
+communication phase actually achieves.
+
+This is the paper's central object of study — measured Horovod-over-TCP
+leaves a 100 Gbps NIC at <32 Gbps utilization, and the what-if analysis
+asks what happens at 100 %.  We model a transport as an *effective
+bandwidth curve* ``effective(bw) -> bytes/s``:
+
+- ``ideal``        full utilization (the paper's what-if),
+- ``horovod_tcp``  calibrated to the paper's Fig. 3/4 measurements:
+                   full utilization up to ~3 Gbps, a soft knee, and a hard
+                   ~32 Gbps ceiling at 100 Gbps NICs,
+- ``tpu_ici``      near-ideal with a small per-hop protocol overhead
+                   (XLA-driven ICI achieves ~95 % of peak in practice).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+GBPS = 1e9 / 8.0  # bytes/s per Gbps
+
+
+@dataclass(frozen=True)
+class Transport:
+    name: str
+    curve: Callable[[float], float]
+    per_tensor_overhead: float = 0.0   # coordination latency per gradient tensor
+
+    def effective(self, bw: float) -> float:
+        return self.curve(bw)
+
+    def utilization(self, bw: float) -> float:
+        return self.effective(bw) / bw if bw > 0 else 0.0
+
+
+def _ideal(bw: float) -> float:
+    return bw
+
+
+# Calibration targets from the paper:
+#   Fig. 4 — 1 Gbps (and 10 Gbps) fully utilized; a 100 Gbps NIC peaks below
+#            32 Gbps during the communication phase.
+#   Fig. 3 — scaling plateaus after 25 Gbps.
+#   Fig. 1 — 2-server scaling 75 / 69 / 56 % (RN50 / RN101 / VGG16).
+# Sharp-knee saturating cap:  eff = bw*cap / (bw^k + cap^k)^(1/k), k=4 —
+# ~bw below the cap, ~cap above it.  On top of the bandwidth ceiling,
+# Horovod's tensor negotiation costs ~250 us per gradient tensor (this is
+# why ResNet101, with ~2x the tensors of ResNet50, measures *worse* despite
+# a mid-sized model).
+_HOROVOD_CAP = 30.0 * GBPS
+_KNEE = 4.0
+
+
+def _horovod_tcp(bw: float) -> float:
+    return bw * _HOROVOD_CAP / (bw ** _KNEE + _HOROVOD_CAP ** _KNEE) ** (1.0 / _KNEE)
+
+
+def _tpu_ici(bw: float) -> float:
+    return 0.95 * bw
+
+
+TRANSPORTS: Dict[str, Transport] = {
+    "ideal": Transport("ideal", _ideal),
+    "horovod_tcp": Transport("horovod_tcp", _horovod_tcp,
+                             per_tensor_overhead=250e-6),
+    "tpu_ici": Transport("tpu_ici", _tpu_ici, per_tensor_overhead=0.0),
+}
+
+
+def get_transport(name: str) -> Transport:
+    return TRANSPORTS[name]

@@ -1,0 +1,2 @@
+"""Deterministic synthetic sharded data pipeline (+ frontend stubs)."""
+from repro.data.pipeline import Prefetcher, SyntheticLM, device_put_batch  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (+ pure-jnp oracles in ref.py, wrappers in ops.py).
+
+Compression hot-spots the paper's §3.2 varies: quantize (int8/ternary),
+topk_mask, fused_add.  Model hot-spots surfaced by the roofline analysis:
+flash_attn (online softmax), wkv (RWKV6), ssm_scan (Mamba selective scan).
+All validated in interpret mode against the oracles; model dispatch via
+``ModelConfig.use_pallas``.
+"""

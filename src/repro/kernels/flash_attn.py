@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+The attention-score hot-spot for the GQA/MLA families.  Grid =
+(batch*heads, q_blocks, kv_blocks) with the kv axis sequential: running
+(max, denominator, accumulator) live in VMEM scratch across kv steps of
+the same q block; fully-masked kv blocks are skipped with ``pl.when``.
+
+Blocks are (Cq, hd) x (Ck, hd) with Cq = Ck = 128 by default — MXU-aligned
+for hd in {64, 128}.  fp32 accumulation regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, cq: int, ck: int, n_kv: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block [qi*cq, qi*cq+cq) attends kv block [ki*ck, ki*ck+ck)
+    run = (not causal) or (ki * ck <= qi * cq + cq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale       # (cq, hd)
+        k = k_ref[0].astype(jnp.float32)               # (ck, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                     # (cq, ck)
+        if causal:
+            q_pos = qi * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+            k_pos = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc_prev * corr + p @ v
+        m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           n_heads: int = 1, n_kv_heads: int = 1,
+                           interpret: bool = False):
+    """q: (B*Hq, Sq, hd); k, v: (B*Hkv, Skv, hd) with heads flattened into
+    the leading dim.  GQA is handled in the BlockSpec index map (each q
+    head reads its kv group's block — no kv repeat materialized).
+    Returns (B*Hq, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    g = n_heads // max(n_kv_heads, 1)
+    cq, ck = min(block_q, Sq), min(block_k, Skv)
+    assert Sq % cq == 0 and Skv % ck == 0
+    grid = (BH, Sq // cq, Skv // ck)
+
+    def kv_map(b, i, j):
+        # q index b = batch * Hq + h  ->  kv index = batch * Hkv + h // g
+        return (b // n_heads) * n_kv_heads + (b % n_heads) // g, j, 0
+
+    kernel = functools.partial(_flash_kernel, cq=cq, ck=ck,
+                               n_kv=Skv // ck, scale=1.0 / math.sqrt(hd),
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, cq, hd), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, ck, hd), kv_map),
+                  pl.BlockSpec((1, ck, hd), kv_map)],
+        out_specs=pl.BlockSpec((1, cq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((cq, 1), jnp.float32),
+                        pltpu.VMEM((cq, 1), jnp.float32),
+                        pltpu.VMEM((cq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Pallas TPU kernel: fused multi-buffer element-wise add.
+
+This is the reduction stage of ring all-reduce — the paper's ``AddEst(x)``
+object.  Naively adding K buffers pairwise reads 2(K-1) + writes (K-1)
+vectors; the fused kernel reads K and writes 1, a (3K-3)/(K+1)x traffic
+saving that directly shrinks the paper's ``(N-1) * AddEst(S/N)`` term.
+
+Layout: buffers stacked (K, n) with n flattened to 128-lane tiles; grid
+walks column tiles, each step accumulating all K rows in VMEM registers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_TILE = 2048      # 2048 lanes * 4B * K rows per VMEM tile
+
+
+def _fused_add_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...].astype(jnp.float32), axis=0,
+                         keepdims=True)
+
+
+def fused_add_2d(buffers: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """buffers: (K, n) with n % COL_TILE == 0 -> (1, n) f32 sum."""
+    K, n = buffers.shape
+    grid = (n // COL_TILE,)
+    return pl.pallas_call(
+        _fused_add_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((K, COL_TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, COL_TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(buffers)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernels for gradient compression: int8 block quantization and
+TernGrad ternarization.
+
+These are the element-wise streaming hot-spots of the paper's §3.2
+(application-layer gradient compression).  TPU adaptation: gradients are
+flattened to (rows, 256) with one quantization block per row — 256 lanes =
+2 VREG lanes-dims, rows tiled in multiples of 8 (f32 sublane) so each grid
+step works on an aligned VMEM tile.  Scales are emitted per row as a
+(rows, 1) column so the layout stays 2-D (TPU Pallas wants >=2-D refs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256          # quantization block = one row
+ROW_TILE = 64        # rows per grid step (64*256*4B = 64 KiB VMEM per ref)
+
+
+# ---------------------------------------------------------------------------
+# int8
+# ---------------------------------------------------------------------------
+
+def _quant_int8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_int8_2d(x: jnp.ndarray, *, interpret: bool = False):
+    """x: (R, BLOCK) float32, R % ROW_TILE == 0 -> (q int8 (R, BLOCK), s (R, 1))."""
+    R = x.shape[0]
+    grid = (R // ROW_TILE,)
+    return pl.pallas_call(
+        _quant_int8_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_int8_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def dequantize_int8_2d(q: jnp.ndarray, s: jnp.ndarray, *, interpret: bool = False):
+    R = q.shape[0]
+    grid = (R // ROW_TILE,)
+    return pl.pallas_call(
+        _dequant_int8_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, s)
+
+
+# ---------------------------------------------------------------------------
+# ternary (TernGrad)
+# ---------------------------------------------------------------------------
+
+def _ternary_kernel(x_ref, t_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(x), axis=1, keepdims=True)
+    t = jnp.where(jnp.abs(x) >= scale, jnp.sign(x), 0.0)
+    t_ref[...] = t.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def ternarize_2d(x: jnp.ndarray, *, interpret: bool = False):
+    R = x.shape[0]
+    grid = (R // ROW_TILE,)
+    return pl.pallas_call(
+        _ternary_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).  The
+same functions serve as the portable fallback on backends without Pallas.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (QSGD-style deterministic variant)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jnp.ndarray, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (n,) float -> (q (n,) int8, scales (n/block,) f32).
+
+    Symmetric per-block scaling: scale = max|x| / 127, q = round(x / scale).
+    n must be a multiple of ``block``.
+    """
+    n = x.shape[0]
+    xb = x.reshape(n // block, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, block: int = 256
+                    ) -> jnp.ndarray:
+    n = q.shape[0]
+    qb = q.reshape(n // block, block).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# ternary quantization (TernGrad)
+# ---------------------------------------------------------------------------
+
+def ternarize(x: jnp.ndarray, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (n,) -> (t (n,) int8 in {-1,0,1}, scales (n/block,) f32).
+
+    scale = mean|x| per block; t = sign(x) where |x| >= scale else 0
+    (deterministic TernGrad variant).
+    """
+    n = x.shape[0]
+    xb = x.reshape(n // block, block).astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(xb), axis=1, keepdims=True)
+    t = jnp.where(jnp.abs(xb) >= scale, jnp.sign(xb), 0.0).astype(jnp.int8)
+    return t.reshape(n), scale[:, 0]
+
+
+def deternarize(t: jnp.ndarray, scales: jnp.ndarray, block: int = 256
+                ) -> jnp.ndarray:
+    n = t.shape[0]
+    tb = t.reshape(n // block, block).astype(jnp.float32)
+    return (tb * scales[:, None]).reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification mask (DGC-style threshold selection)
+# ---------------------------------------------------------------------------
+
+def topk_threshold(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Exact magnitude threshold keeping ceil(ratio * n) entries."""
+    n = x.shape[0]
+    k = max(int(ratio * n), 1)
+    vals = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), k)[0]
+    return vals[-1]
+
+
+def topk_mask(x: jnp.ndarray, threshold: jnp.ndarray) -> jnp.ndarray:
+    """Mask keeping entries with |x| >= threshold; returns x * mask."""
+    return jnp.where(jnp.abs(x.astype(jnp.float32)) >= threshold,
+                     x, jnp.zeros((), x.dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-buffer add (the all-reduce reduction hot-spot; AddEst's object)
+# ---------------------------------------------------------------------------
+
+def fused_add(buffers: jnp.ndarray) -> jnp.ndarray:
+    """buffers: (n_bufs, n) -> (n,) fp32 sum (one pass over memory)."""
+    return jnp.sum(buffers.astype(jnp.float32), axis=0)

@@ -1,0 +1,39 @@
+"""Pallas TPU kernel: magnitude-threshold sparsification mask (DGC-style).
+
+Top-k selection over a 64 MB fusion bucket is done in two stages: the exact
+threshold comes from ``jax.lax.top_k`` on a sampled subset (host/XLA side,
+see kernels.ops), and applying the mask — the bandwidth-bound full pass over
+the bucket — is this kernel.  One grid step masks a (ROW_TILE, 256) VMEM
+tile; the threshold rides along as a (1, 1) scalar block broadcast to every
+step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize import BLOCK, ROW_TILE
+
+
+def _topk_mask_kernel(thr_ref, x_ref, o_ref):
+    x = x_ref[...]
+    thr = thr_ref[0, 0]
+    o_ref[...] = jnp.where(jnp.abs(x.astype(jnp.float32)) >= thr, x,
+                           jnp.zeros((), x.dtype))
+
+
+def topk_mask_2d(x: jnp.ndarray, threshold: jnp.ndarray, *,
+                 interpret: bool = False) -> jnp.ndarray:
+    """x: (R, BLOCK); threshold: () f32 -> masked x."""
+    R = x.shape[0]
+    grid = (R // ROW_TILE,)
+    return pl.pallas_call(
+        _topk_mask_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_TILE, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(threshold.reshape(1, 1).astype(jnp.float32), x)

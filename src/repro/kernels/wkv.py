@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence.
+
+The mixer's hot-spot: per head, y_t = r_t (S_{t-1} + (u*k_t) v_t^T) with
+S_t = diag(w_t) S_{t-1} + k_t v_t^T.  The chunked form (DESIGN.md §8) does
+intra-chunk decay-weighted attention (MXU matmuls) plus a carried
+(hd x hd) state.
+
+TPU mapping: grid = (B, H, n_chunks) with dimension semantics
+(parallel, parallel, arbitrary) — the chunk axis is sequential, and the
+state lives in a VMEM scratch buffer that persists across grid steps of the
+same (b, h).  Each grid step touches one (C, hd) tile per operand: for
+C = hd = 64 that is 4 x 16 KiB in + 16 KiB out + 16 KiB scratch, far under
+VMEM, and every matmul is 64x64 — MXU-aligned.
+
+All math fp32; every decay exponent is <= 0 so underflow is the correct
+limit (no logspace ratio explosions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                y_ref, sout_ref, state, *, chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0, 0]
+
+    rr = r_ref[0, 0]                      # (C, hd)
+    kk = k_ref[0, 0]
+    vv = v_ref[0, 0]
+    ww = w_ref[0, 0]                      # log-decay <= 0
+    u = u_ref[0]                          # (1, hd) -> broadcast
+    s = state[...]                        # (hd, hd)
+
+    L = jnp.cumsum(ww, axis=0)            # inclusive
+    Lx = L - ww                           # exclusive
+    # pairwise decay exp(Lx[t] - L[j]) for j < t, contracted over hd:
+    # scores[t, j] = sum_d r[t,d] k[j,d] exp(Lx[t,d] - L[j,d])
+    dec = jnp.exp(jnp.clip(Lx[:, None, :] - L[None, :, :], -60.0, 0.0))
+    scores = jnp.einsum("td,jd,tjd->tj", rr, kk, dec)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(j_idx < t_idx, scores, 0.0)
+    diag = jnp.sum(rr * u * kk, axis=1)   # (C,)
+    y = scores @ vv + diag[:, None] * vv
+    y += (rr * jnp.exp(Lx)) @ s           # carried-state contribution
+    y_ref[0, 0] = y
+
+    k_dec = kk * jnp.exp(L[-1:] - L)      # <= 1
+    s_new = s * jnp.exp(L[-1])[:, None] + k_dec.T @ vv
+    state[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _finish():
+        sout_ref[0, 0] = s_new
+
+
+def wkv_pallas(r, k, v, logw, u, s0, *, chunk: int = 64,
+               interpret: bool = False):
+    """r, k, v, logw: (B, H, S, hd) fp32; u: (H, hd); s0: (B, H, hd, hd).
+
+    Returns (y (B, H, S, hd), s_final (B, H, hd, hd)).  S % chunk == 0.
+    """
+    B, H, S, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    grid = (B, H, n_chunks)
+    seq_spec = pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0))
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+                  pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return y, s_out

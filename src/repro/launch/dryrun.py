@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+# combination against the production meshes with ShapeDtypeStruct stand-ins.
+#
+# Outputs per combo: memory_analysis, cost_analysis (FLOPs/bytes), and the
+# collective-bytes breakdown parsed from the compiled HLO — the inputs to the
+# roofline analysis (EXPERIMENTS.md §Roofline).
+#
+# NOTE: the XLA_FLAGS lines above MUST stay the first statements in this file
+# (jax locks the device count on first init), hence no module docstring.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.archs import ALL_ARCHS, FULL_ATTENTION, LONG_SKIP
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh, mesh_num_devices
+from repro.models.registry import get_model
+from repro.optim.optimizers import get_optimizer
+from repro.utils.hlo import analyze, collective_bytes
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def resolve_cfg(arch: str, shape_name: str, production: bool = False):
+    """Apply the long-context variant policy (DESIGN.md §Arch-applicability)
+    and, when ``production``, the §Perf-validated optimization flags."""
+    cfg = get_config(arch)
+    note = ""
+    if production:
+        from repro.configs.base import production_overrides
+        kw = production_overrides(cfg)
+        cfg = cfg.replace(**kw)
+        note = "production flags: " + ",".join(sorted(kw))
+    if shape_name == "long_500k":
+        if arch in LONG_SKIP:
+            return None, "skip: enc-dec full attention, 448-token decoder by design"
+        if arch in FULL_ATTENTION:
+            cfg = cfg.replace(sliding_window=4096)
+            note = (note + "; " if note else "") + \
+                "swa-4096 variant (sub-quadratic requirement)"
+    return cfg, note
+
+
+def dryrun_one(arch: str, shape_name: str, mesh, opt_name: str = "adamw",
+               verbose: bool = True, save_hlo: bool = True,
+               production: bool = False) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg, note = resolve_cfg(arch, shape_name, production=production)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "note": note}
+    api = get_model(cfg)
+    opt = get_optimizer(opt_name) if shape.kind == "train" else None
+    t0 = time.time()
+    spec = specs_lib.step_spec(api, shape, mesh, opt)
+    fn = specs_lib.make_step_fn(api, spec.kind, opt)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=spec.donate_argnums)
+        lowered = jitted.lower(*spec.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    if save_hlo:
+        hdir = ARTIFACT_DIR / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'x'.join(map(str, mesh.devices.shape))}"
+        with gzip.open(hdir / f"{tag}.hlo.gz", "wt") as f:
+            f.write(hlo_text)
+    coll = collective_bytes(hlo_text)
+    # loop-trip-aware analysis: cost_analysis counts while bodies once, so
+    # scan-over-layers models are under-reported by ~num_layers without this
+    ana = analyze(hlo_text)
+    n_dev = mesh_num_devices(mesh)
+    result = {
+        "arch": arch, "shape": shape_name, "kind": spec.kind,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "devices": n_dev, "status": "ok", "note": note,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": coll,
+        "analyzed": {
+            "flops": ana.flops,
+            "bytes": ana.bytes,
+            "collective_bytes": ana.collective_bytes,
+            "collective_counts": ana.collective_counts,
+            "while_trips": ana.while_trips,
+        },
+        "memory": {
+            k: getattr(mem, k)
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} @ {result['mesh']}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+              f"flops={ana.flops:.3e}, coll={ana.total_collective_bytes:.3e}B) {note}")
+        print(f"         memory: {result['memory']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--production", action="store_true",
+                    help="apply the §Perf-validated optimization flags")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    results = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    results.append(dryrun_one(arch, shape, mesh,
+                                              production=args.production))
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "x".join(map(str, mesh.devices.shape)),
+                                    "status": "FAIL", "error": repr(e)})
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    out = Path(args.out) if args.out else ARTIFACT_DIR / "results.json"
+    existing = []
+    if out.exists():
+        existing = json.loads(out.read_text())
+        keys = {(r["arch"], r["shape"], r.get("mesh")) for r in results}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r.get("mesh")) not in keys]
+    out.write_text(json.dumps(existing + results, indent=1))
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{len(results)} combos, {n_fail} failures -> {out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

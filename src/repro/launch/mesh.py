@@ -1,0 +1,37 @@
+"""Production mesh definitions (TPU v5e pods).
+
+``make_production_mesh`` is a function, not a module constant, so importing
+this module never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; smoke tests and benchmarks see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+DCN_BW = 25e9                   # bytes/s per host across pods (assumed)
+HBM_BYTES = 16 * 1024 ** 3      # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh() -> Mesh:
+    """1-device mesh with the same axis names, for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_num_devices(mesh: Mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

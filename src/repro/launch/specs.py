@@ -1,0 +1,200 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape).
+
+Nothing here allocates device memory: params, optimizer state, batches and
+KV caches are all ``jax.ShapeDtypeStruct`` trees fed to ``jax.jit(...).lower``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.registry import ModelApi, get_model
+from repro.parallel import sharding as shd
+
+
+class StepSpec(NamedTuple):
+    """Everything dryrun needs to lower one (arch x shape x mesh) combo."""
+    kind: str
+    args: Tuple[Any, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_shape(api: ModelApi) -> Any:
+    return jax.eval_shape(api.init, jax.random.key(0))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh]):
+    """Training/prefill batch: ShapeDtypeStructs + PartitionSpecs."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.data_batch_spec(mesh, B) if mesh else P()
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    specs = {"tokens": bspec}
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+        specs["labels"] = bspec
+    if cfg.family == "vlm" and cfg.prefix_embeds:
+        batch["prefix_embeds"] = _sds((B, cfg.prefix_embeds, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+        specs["prefix_embeds"] = P(bspec[0], None, "model")
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        specs["frames"] = P(bspec[0], None, None)
+    return batch, specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh]):
+    B = shape.global_batch
+    bspec = shd.data_batch_spec(mesh, B) if mesh else P()
+    batch = {"tokens": _sds((B, 1), jnp.int32)}
+    specs = {"tokens": P(bspec[0], None)}
+    # enc-dec cross-attention K/V live in the decode cache (computed once at
+    # prefill), so the decode batch is tokens-only for every family.
+    return batch, specs
+
+
+def cache_structs(api: ModelApi, batch: int, cache_len: int):
+    spec_tree = api.cache_spec(batch, cache_len)
+    is_leaf = lambda s: isinstance(s, tuple) and len(s) == 2 and isinstance(s[1], jnp.dtype)
+    return jax.tree_util.tree_map(lambda s: _sds(s[0], s[1]), spec_tree,
+                                  is_leaf=is_leaf)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_sds: Any):
+    def one(path, leaf):
+        names = shd._path_names(path)
+        return NamedSharding(mesh, shd.cache_pspec(cfg, mesh, batch, names,
+                                                   len(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state sharding (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(params_sds: Any, cfg: ModelConfig, mesh: Mesh):
+    """m/nu are fp32 copies of params, additionally sharded over `data` on
+    the first replicated dim that divides (ZeRO-1)."""
+    pspecs = shd.param_specs(params_sds, cfg)
+    dsize = shd.mesh_axis_size(mesh, "data")
+
+    def zero1(leaf_sds, spec):
+        dims = list(spec) + [None] * (len(leaf_sds.shape) - len(spec))
+        if "data" not in jax.tree_util.tree_leaves(dims):
+            for i, (d, s) in enumerate(zip(dims, leaf_sds.shape)):
+                if d is None and s % dsize == 0 and s >= dsize:
+                    dims[i] = "data"
+                    break
+        return P(*dims)
+
+    moment_specs = jax.tree_util.tree_map(zero1, params_sds, pspecs)
+    from repro.optim.optimizers import OptState
+    return OptState(P(), moment_specs, moment_specs)
+
+
+def opt_state_shape(params_sds: Any, opt) -> Any:
+    return jax.eval_shape(opt.init, params_sds)
+
+
+# ---------------------------------------------------------------------------
+# top-level StepSpec builders
+# ---------------------------------------------------------------------------
+
+def _ns(mesh, tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def train_step_spec(api: ModelApi, shape: InputShape, mesh: Mesh, opt) -> StepSpec:
+    cfg = api.cfg
+    p_sds = params_shape(api)
+    o_sds = opt_state_shape(p_sds, opt)
+    batch, bspecs = batch_specs(cfg, shape, mesh)
+    p_specs = shd.param_specs(p_sds, cfg)
+    o_specs = opt_state_specs(p_sds, cfg, mesh)
+    # moments share param tree structure; broadcast their spec trees
+    in_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), _ns(mesh, bspecs))
+    out_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), None)
+    return StepSpec("train", (p_sds, o_sds, batch), in_sh, out_sh, (0, 1))
+
+
+def prefill_step_spec(api: ModelApi, shape: InputShape, mesh: Mesh) -> StepSpec:
+    cfg = api.cfg
+    p_sds = params_shape(api)
+    batch, bspecs = batch_specs(cfg, shape, mesh)
+    in_sh = (_ns(mesh, shd.param_specs(p_sds, cfg)), _ns(mesh, bspecs))
+    return StepSpec("prefill", (p_sds, batch), in_sh, None, ())
+
+
+def decode_step_spec(api: ModelApi, shape: InputShape, mesh: Mesh) -> StepSpec:
+    cfg = api.cfg
+    B = shape.global_batch
+    p_sds = params_shape(api)
+    batch, bspecs = decode_batch_specs(cfg, shape, mesh)
+    cache = cache_structs(api, B, shape.seq_len)
+    cache_sh = cache_shardings(cfg, mesh, B, cache)
+    idx = _sds((), jnp.int32)
+    in_sh = (_ns(mesh, shd.param_specs(p_sds, cfg)), _ns(mesh, bspecs),
+             cache_sh, NamedSharding(mesh, P()))
+    out_sh = (None, cache_sh)
+    return StepSpec("decode", (p_sds, batch, cache, idx), in_sh, out_sh, (2,))
+
+
+def _unshard_specs(api: ModelApi):
+    """Param specs with the fsdp (`data`) axis removed — the compute-time
+    layout for ZeRO-1-style stepping (cfg.fsdp_unshard_step)."""
+    cfg = api.cfg.replace(sharding="dp_tp")
+    return shd.param_specs(params_shape(api), cfg)
+
+
+def make_step_fn(api: ModelApi, kind: str, opt=None):
+    cfg = api.cfg
+    unshard = (_unshard_specs(api)
+               if getattr(cfg, "fsdp_unshard_step", False)
+               and cfg.sharding == "fsdp_tp" else None)
+    if kind == "train":
+        def train_step(params, opt_state, batch):
+            if unshard is not None:
+                # ZeRO-1: one all-gather of the param stack per step; XLA
+                # reshards (reduce-scatters) on the way out via out_shardings
+                compute_params = jax.lax.with_sharding_constraint(
+                    params, unshard)
+            else:
+                compute_params = params
+            (loss, metrics), grads = jax.value_and_grad(api.loss_fn, has_aux=True)(
+                compute_params, batch)
+            lr = 3e-4
+            new_p, new_o = opt.update(params, opt_state, grads, lr)
+            return new_p, new_o, {"loss": loss, **metrics}
+        return train_step
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            p = (jax.lax.with_sharding_constraint(params, unshard)
+                 if unshard is not None else params)
+            logits, caches = api.prefill(p, batch)
+            return logits
+        return prefill_step
+    if kind == "decode":
+        def decode_step(params, batch, cache, cache_index):
+            return api.decode_step(params, batch, cache, cache_index)
+        return decode_step
+    raise ValueError(kind)
+
+
+def step_spec(api: ModelApi, shape: InputShape, mesh: Mesh, opt=None) -> StepSpec:
+    if shape.kind == "train":
+        return train_step_spec(api, shape, mesh, opt)
+    if shape.kind == "prefill":
+        return prefill_step_spec(api, shape, mesh)
+    return decode_step_spec(api, shape, mesh)

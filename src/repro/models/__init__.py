@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo: dense GQA/MLA transformers, GShard MoE, Mamba,
+RWKV6, hybrid Jamba, Whisper enc-dec, VLM wrapper, and the paper's CNNs."""

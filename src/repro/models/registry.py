@@ -1,0 +1,133 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a ``ModelApi`` whose members close over ``cfg``:
+
+    init(key) -> params
+    loss_fn(params, batch) -> (loss, metrics)          # batch: tokens/labels(+frontend)
+    prefill(params, batch) -> (logits, caches)
+    decode_step(params, batch, cache, cache_index) -> (logits, new_cache)
+    cache_spec(batch_size, cache_len) -> pytree of (shape, dtype) tuples
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_spec: Callable
+
+
+def _transformer_api(cfg: ModelConfig) -> ModelApi:
+    from repro.models import transformer as t
+
+    def loss_fn(params, batch):
+        return t.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch):
+        return t.prefill(params, batch["tokens"], cfg,
+                         prefix_embeds=batch.get("prefix_embeds"))
+
+    def decode_step(params, batch, cache, cache_index):
+        return t.decode_step(params, batch["tokens"], cache, cache_index, cfg)
+
+    return ModelApi(cfg, lambda key: t.init_decoder(key, cfg), loss_fn,
+                    prefill, decode_step,
+                    lambda b, w: t.cache_spec(cfg, b, w))
+
+
+def _ssm_api(cfg: ModelConfig) -> ModelApi:
+    from repro.models import rwkv as r
+
+    def loss_fn(params, batch):
+        return r.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch):
+        return r.prefill(params, batch["tokens"], cfg)
+
+    def decode_step(params, batch, cache, cache_index):
+        return r.decode_step(params, batch["tokens"], cache, cache_index, cfg)
+
+    return ModelApi(cfg, lambda key: r.init_model(key, cfg), loss_fn,
+                    prefill, decode_step, lambda b, w: r.cache_spec(cfg, b))
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelApi:
+    from repro.models import jamba as j
+
+    def loss_fn(params, batch):
+        return j.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch):
+        return j.prefill(params, batch["tokens"], cfg)
+
+    def decode_step(params, batch, cache, cache_index):
+        return j.decode_step(params, batch["tokens"], cache, cache_index, cfg)
+
+    return ModelApi(cfg, lambda key: j.init_model(key, cfg), loss_fn,
+                    prefill, decode_step, lambda b, w: j.cache_spec(cfg, b, w))
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelApi:
+    from repro.models import whisper as w
+
+    def loss_fn(params, batch):
+        return w.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch):
+        return w.prefill(params, batch["tokens"], batch["frames"], cfg)
+
+    def decode_step(params, batch, cache, cache_index):
+        return w.decode_step(params, batch["tokens"], cache, cache_index, cfg)
+
+    return ModelApi(cfg, lambda key: w.init_model(key, cfg), loss_fn,
+                    prefill, decode_step, lambda b, wl: w.cache_spec(cfg, b, wl))
+
+
+# cache leaves whose dim-2 is the ring-buffer/sequence axis
+_SEQ_CACHE_LEAVES = {"k", "v", "c_kv", "k_rope"}
+
+
+def pad_cache(cache: Any, new_len: int) -> Any:
+    """Grow the ring-buffer (W) axis of a prefill cache to ``new_len`` so
+    decode can append tokens.  Recurrent-state leaves (SSM/RWKV) and
+    cross-attention K/V are untouched (they have no growing axis)."""
+
+    def one(path, leaf):
+        name = None
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                name = str(p.key)
+        if name in _SEQ_CACHE_LEAVES and leaf.ndim >= 3:
+            axis = 2 if leaf.ndim >= 4 else 1
+            cur = leaf.shape[axis]
+            if cur < new_len:
+                pad = [(0, 0)] * leaf.ndim
+                pad[axis] = (0, new_len - cur)
+                return jnp.pad(leaf, pad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _transformer_api(cfg)
+    if fam == "ssm":
+        return _ssm_api(cfg)
+    if fam == "hybrid":
+        return _hybrid_api(cfg)
+    if fam == "encdec":
+        return _encdec_api(cfg)
+    raise ValueError(f"unknown family: {fam}")

@@ -1,0 +1,3 @@
+"""Optimizers (SGD/momentum/AdamW) + LR schedules and gradient clipping."""
+from repro.optim.optimizers import OptState, Optimizer, get_optimizer  # noqa: F401
+from repro.optim.schedule import clip_by_global_norm, get_schedule  # noqa: F401

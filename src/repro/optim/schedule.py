@@ -1,0 +1,46 @@
+"""Learning-rate schedules and gradient clipping (pure JAX)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    """Linear warmup -> cosine decay to ``final_frac * peak_lr``."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr
+
+
+def constant(lr_value: float) -> Callable:
+    return lambda step: jnp.asarray(lr_value, jnp.float32)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    """Returns (clipped grads, pre-clip norm)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def get_schedule(name: str, peak_lr: float, warmup: int, total: int) -> Callable:
+    if name == "cosine":
+        return warmup_cosine(peak_lr, warmup, total)
+    if name == "constant":
+        return constant(peak_lr)
+    raise ValueError(name)

@@ -1,0 +1,1 @@
+"""Sharding rules and the bucketed/hierarchical/compressed grad sync."""

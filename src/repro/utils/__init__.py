@@ -1,0 +1,1 @@
+"""Analysis utilities (loop-trip-aware HLO cost analysis)."""

@@ -1,0 +1,51 @@
+"""Executable paper workloads (ResNet/VGG): param counts match the paper's
+model sizes, forward/train steps run, and param counts agree with the
+analytic profiles the simulator uses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cnn_profiles import get_profile
+from repro.models.cnn import cnn_loss, get_cnn
+
+
+def _count(params):
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params)
+               if hasattr(p, "size"))
+
+
+@pytest.mark.parametrize("name", ["resnet50", "resnet101", "vgg16"])
+def test_param_counts_match_paper_profiles(name):
+    params, _ = get_cnn(name, jax.random.key(0))
+    real = _count(params)
+    prof = get_profile(name).total_params
+    # analytic profile omits bn in fcs etc.; must agree within 1%
+    assert abs(real - prof) / prof < 0.01, (name, real, prof)
+
+
+@pytest.mark.parametrize("name", ["resnet50", "vgg16"])
+def test_forward_and_train_step(name):
+    params, forward = get_cnn(name, jax.random.key(0), num_classes=10,
+                              width_mult=0.125)
+    B = 2
+    batch = {"images": jax.random.normal(jax.random.key(1), (B, 224, 224, 3)),
+             "labels": jnp.asarray([1, 3], jnp.int32)}
+    logits = jax.jit(forward)(params, batch["images"])
+    assert logits.shape == (B, 10)
+    assert jnp.all(jnp.isfinite(logits))
+
+    loss0 = float(cnn_loss(forward, params, batch))
+    grads = jax.jit(jax.grad(lambda p: cnn_loss(forward, p, batch)))(params)
+    params2 = jax.tree_util.tree_map(
+        lambda p, g: p - 0.05 * g if hasattr(p, "shape") else p, params, grads)
+    loss1 = float(cnn_loss(forward, params2, batch))
+    assert np.isfinite(loss1) and loss1 < loss0
+
+
+def test_resnet_sizes_vs_paper_mb():
+    # paper: 97 / 170 / 527 MB
+    for name, mb in [("resnet50", 97), ("resnet101", 170), ("vgg16", 527)]:
+        params, _ = get_cnn(name, jax.random.key(0))
+        size_mib = _count(params) * 4 / 1024 ** 2
+        assert abs(size_mib - mb) < mb * 0.05, (name, size_mib)

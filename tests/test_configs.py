@@ -1,0 +1,72 @@
+"""The 10 assigned architecture configs match the assignment exactly."""
+import pytest
+
+from repro.configs import get_config, list_configs
+
+# (id, layers, d_model, heads, kv, d_ff, vocab)
+ASSIGNED = [
+    ("jamba-v0.1-52b", 32, 4096, 32, 8, 14336, 65536),
+    ("command-r-35b", 40, 8192, 64, 8, 22528, 256000),
+    ("rwkv6-1.6b", 24, 2048, 32, 32, 7168, 65536),
+    ("internvl2-2b", 24, 2048, 16, 8, 8192, 92553),
+    ("stablelm-3b", 32, 2560, 32, 32, 6912, 50304),
+    ("whisper-base", 6, 512, 8, 8, 2048, 51865),
+    ("deepseek-v2-236b", 60, 5120, 128, 128, 12288, 102400),
+    ("arctic-480b", 35, 7168, 56, 8, 4864, 32000),
+    ("deepseek-coder-33b", 62, 7168, 56, 8, 19200, 32256),
+    ("moonshot-v1-16b-a3b", 48, 2048, 16, 16, 11264, 163840),
+]
+
+
+@pytest.mark.parametrize("name,L,D,H,KV,F,V", ASSIGNED)
+def test_assigned_dims(name, L, D, H, KV, F, V):
+    cfg = get_config(name)
+    assert cfg.num_layers == L
+    assert cfg.d_model == D
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == KV
+    assert cfg.d_ff == F
+    assert cfg.vocab_size == V
+    assert cfg.source, "every config must cite its source"
+
+
+def test_all_registered():
+    names = list_configs()
+    for name, *_ in ASSIGNED:
+        assert name in names
+
+
+def test_moe_settings():
+    jamba = get_config("jamba-v0.1-52b")
+    assert jamba.moe.num_experts == 16 and jamba.moe.top_k == 2
+    dsv2 = get_config("deepseek-v2-236b")
+    assert dsv2.moe.num_experts == 160 and dsv2.moe.top_k == 6
+    assert dsv2.moe.num_shared_experts == 2
+    assert dsv2.attention == "mla" and dsv2.mla_kv_lora == 512
+    assert dsv2.moe.d_ff_expert == 1536
+    arctic = get_config("arctic-480b")
+    assert arctic.moe.num_experts == 128 and arctic.moe.top_k == 2
+    moon = get_config("moonshot-v1-16b-a3b")
+    assert moon.moe.num_experts == 64 and moon.moe.top_k == 6
+    assert moon.moe.d_ff_expert == 1408
+
+
+def test_family_coverage():
+    fams = {get_config(n).family for n, *_ in ASSIGNED}
+    assert fams >= {"dense", "moe", "ssm", "hybrid", "vlm", "encdec"}
+
+
+def test_smoke_reduction_bounds():
+    for name, *_ in ASSIGNED:
+        cfg = get_config(name).smoke()
+        assert cfg.num_layers <= 8
+        assert cfg.d_model <= 512
+        if cfg.moe:
+            assert cfg.moe.num_experts <= 4
+
+
+def test_padded_vocab():
+    for name, *_ in ASSIGNED:
+        cfg = get_config(name)
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab % 256 == 0

@@ -1,0 +1,87 @@
+"""MoE dispatch invariants (GShard einsum path)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import moe as moe_lib
+
+
+def _cfg(E=4, K=2, cf=1.25, shared=0):
+    base = get_config("arctic-480b").smoke()
+    return base.replace(moe=dataclasses.replace(
+        base.moe, num_experts=E, top_k=K, capacity_factor=cf,
+        num_shared_experts=shared))
+
+
+def test_outputs_finite_and_shaped():
+    cfg = _cfg()
+    p = moe_lib.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    out, aux = moe_lib.moe_block(p, x, cfg)
+    assert out.shape == x.shape
+    assert jnp.all(jnp.isfinite(out))
+    assert set(aux) == {"load_balance", "router_z"}
+    assert float(aux["load_balance"]) >= 0
+
+
+def test_no_drop_capacity_is_linear_in_gates():
+    """With capacity >= top_k*S the block must process every token: output
+    equals the gate-weighted sum of per-expert MLPs (dense check)."""
+    cfg = _cfg(E=4, K=2, cf=4.0)     # capacity = K*S*cf/E >= S with cf=E/K*...
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    p = moe_lib.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model)) * 0.3
+    out, _ = moe_lib.moe_block(p, x, cfg)
+
+    # dense reference
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, gi = jax.lax.top_k(probs, cfg.moe.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for e in range(cfg.moe.num_experts):
+        h = jax.nn.silu(x @ p["wg"][e]) * (x @ p["wi"][e])
+        y_e = h @ p["wo"][e]
+        w_e = jnp.sum(jnp.where(gi == e, gv, 0.0), axis=-1)
+        ref += w_e[..., None].astype(x.dtype) * y_e
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_capacity_never_exceeded(seed):
+    cfg = _cfg(E=4, K=2, cf=1.0)
+    S = 16
+    C = moe_lib.expert_capacity(cfg.moe, S)
+    p = moe_lib.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(seed), (2, S, cfg.d_model))
+    # reproduce the dispatch tensor and check per-expert token counts
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, gi = jax.lax.top_k(probs, cfg.moe.top_k)
+    sel = jax.nn.one_hot(gi, cfg.moe.num_experts, dtype=jnp.float32)
+    flat = sel.reshape(2, S * cfg.moe.top_k, cfg.moe.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    within = (pos < C).reshape(2, S, cfg.moe.top_k, cfg.moe.num_experts)
+    kept = sel.reshape(2, S, cfg.moe.top_k, -1) * within
+    per_expert = kept.sum(axis=(1, 2))
+    assert np.all(np.asarray(per_expert) <= C + 1e-6)
+
+
+def test_shared_expert_added():
+    cfg_with = _cfg(shared=1)
+    p = moe_lib.init_moe(jax.random.key(0), cfg_with)
+    assert "shared" in p
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg_with.d_model)) * 0.1
+    out_with, _ = moe_lib.moe_block(p, x, cfg_with)
+    p2 = dict(p)
+    del p2["shared"]
+    cfg_wo = _cfg(shared=0)
+    out_wo, _ = moe_lib.moe_block(p2, x, cfg_wo)
+    assert float(jnp.max(jnp.abs(out_with - out_wo))) > 1e-6

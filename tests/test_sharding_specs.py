@@ -1,0 +1,99 @@
+"""Sharding rules produce divisibility-valid PartitionSpecs for every
+architecture on the production mesh shapes — validated abstractly (no
+devices needed): every sharded dim must divide by the mesh axis size."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.archs import ALL_ARCHS, FULL_ATTENTION, LONG_SKIP
+from repro.models.registry import get_model
+from repro.parallel import sharding as shd
+
+MESH_AXES = {"data": 16, "model": 16}          # single-pod 16x16
+MESH_AXES_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_size(axes, name):
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= axes.get(a, 1)
+        return n
+    return axes.get(name, 1)
+
+
+def _check_specs(tree_sds, spec_tree, axes, what):
+    leaves = jax.tree_util.tree_leaves_with_path(tree_sds)
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves) == len(specs)
+    for (path, leaf), spec in zip(leaves, specs):
+        for dim, name in enumerate(spec):
+            if name is None:
+                continue
+            size = _axis_size(axes, name)
+            assert leaf.shape[dim] % size == 0, (
+                f"{what}: {jax.tree_util.keystr(path)} dim {dim} "
+                f"({leaf.shape}) not divisible by {name}={size}")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_specs_divisible(arch):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    p_sds = jax.eval_shape(api.init, jax.random.key(0))
+    specs = shd.param_specs(p_sds, cfg)
+    _check_specs(p_sds, specs, MESH_AXES, f"{arch} params")
+    _check_specs(p_sds, specs, MESH_AXES_MP, f"{arch} params (mp)")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    if shape_name == "long_500k" and arch in LONG_SKIP:
+        pytest.skip("long_500k skipped for this arch by design")
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and arch in FULL_ATTENTION:
+        cfg = cfg.replace(sliding_window=4096)
+    shape = INPUT_SHAPES[shape_name]
+    api = get_model(cfg)
+    spec_tree = api.cache_spec(shape.global_batch, shape.seq_len)
+    is_leaf = lambda s: isinstance(s, tuple) and len(s) == 2
+    sds = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s[0], s[1]), spec_tree, is_leaf=is_leaf)
+
+    class FakeMesh:
+        axis_names = tuple(MESH_AXES)
+        class devices:
+            shape = tuple(MESH_AXES.values())
+    mesh = FakeMesh()
+
+    leaves = jax.tree_util.tree_leaves_with_path(sds)
+    for path, leaf in leaves:
+        names = shd._path_names([p for p in path])
+        spec = shd.cache_pspec(cfg, mesh, shape.global_batch, names,
+                               len(leaf.shape))
+        for dim, name in enumerate(spec):
+            if name is None:
+                continue
+            size = _axis_size(MESH_AXES, name)
+            assert leaf.shape[dim] % size == 0, (
+                f"{arch}/{shape_name}: {names} dim {dim} {leaf.shape} "
+                f"% {name}={size}")
+
+
+def test_fsdp_changes_param_specs():
+    cfg = get_config("command-r-35b")
+    api = get_model(cfg)
+    p_sds = jax.eval_shape(api.init, jax.random.key(0))
+    fsdp = shd.param_specs(p_sds, cfg)
+    dp = shd.param_specs(p_sds, cfg.replace(sharding="dp_tp"))
+    fsdp_flat = jax.tree_util.tree_leaves(
+        fsdp, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    dp_flat = jax.tree_util.tree_leaves(
+        dp, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    n_data = sum(1 for s in fsdp_flat if "data" in jax.tree_util.tree_leaves(tuple(s)))
+    assert n_data > 0, "fsdp must shard some params over data"
+    n_data_dp = sum(1 for s in dp_flat if "data" in jax.tree_util.tree_leaves(tuple(s)))
+    assert n_data_dp == 0, "dp_tp must not shard params over data"
