@@ -1,8 +1,15 @@
-"""One benchmark per paper figure/table.
+"""Non-sweep paper analyses for the benchmark harness.
 
-Each function runs the corresponding analysis and returns (rows, validation)
-where ``validation`` is a dict of claim-checks against the paper's numbers.
-``benchmarks.run`` prints them as CSV and a pass/fail summary.
+The sweep figures (fig1/3/4/6/7/8/9) live in the experiment engine now:
+grids in ``repro.experiments.grids``, claim checks in
+``repro.experiments.validations``, row-shaped access in
+``repro.core.whatif`` — ``benchmarks.run`` consumes the engine's artifact
+directly.  What remains here are the analyses with no sweep grid: the
+computation-time sanity check (fig2), the parameter-transmission table,
+and the ByteScheduler overlap bound.
+
+Each function returns (rows, validation) where ``validation`` carries the
+claim-check booleans plus ``us`` (wall-clock microseconds).
 """
 from __future__ import annotations
 
@@ -10,7 +17,6 @@ import time
 from typing import Dict, List, Tuple
 
 from repro.core import whatif
-from repro.core.whatif import sim_scaling
 
 Rows = List[Dict]
 
@@ -19,19 +25,6 @@ def _timed(fn, *a, **kw):
     t0 = time.perf_counter()
     out = fn(*a, **kw)
     return out, (time.perf_counter() - t0) * 1e6
-
-
-def fig1_scaling_vs_servers() -> Tuple[Rows, Dict]:
-    rows, us = _timed(whatif.fig1_scaling_vs_servers)
-    by = {(r["model"], r["servers"]): r["scaling"] for r in rows}
-    # paper §2.2: RN50/RN101/VGG16 = 75/69/56 % @2 servers; none exceeds 76 %
-    val = {
-        "rn50_2srv_in_[0.6,0.9]": 0.60 <= by[("resnet50", 2)] <= 0.90,
-        "vgg16_worst": by[("vgg16", 2)] < by[("resnet50", 2)],
-        "no_linear_scaling": max(by.values()) < 0.85,
-        "us": us,
-    }
-    return rows, val
 
 
 def fig2_computation_time() -> Tuple[Rows, Dict]:
@@ -44,71 +37,6 @@ def fig2_computation_time() -> Tuple[Rows, Dict]:
             rows.append(dict(model=m, servers=n, t_back_ms=tl.t_back * 1e3,
                              t_batch_ms=tl.t_batch * 1e3))
     val = {"flat_by_construction": True, "us": 0.0}
-    return rows, val
-
-
-def fig3_scaling_vs_bandwidth() -> Tuple[Rows, Dict]:
-    rows, us = _timed(whatif.fig3_scaling_vs_bandwidth)
-    by = {(r["servers"], r["bandwidth_gbps"]): r["scaling"] for r in rows}
-    # paper: 2-server RN50 grows 13 % -> ~68 % from 1 to 10 Gbps, then
-    # plateaus after 25 Gbps (measured transport)
-    val = {
-        "low_bw_poor": by[(2, 1)] < 0.25,
-        "grows_to_10g": by[(2, 10)] > 3 * by[(2, 1)],
-        "plateau_after_25g": (by[(2, 100)] - by[(2, 25)]) < 0.15,
-        "us": us,
-    }
-    return rows, val
-
-
-def fig4_utilization() -> Tuple[Rows, Dict]:
-    rows, us = _timed(whatif.fig4_utilization)
-    by = {(r["model"], r["bandwidth_gbps"]): r for r in rows}
-    val = {
-        "full_util_at_1g": by[("resnet50", 1)]["utilization"] > 0.9,
-        "low_util_at_100g": by[("resnet50", 100)]["effective_gbps"] < 32.0,
-        "us": us,
-    }
-    return rows, val
-
-
-def fig6_sim_vs_measured() -> Tuple[Rows, Dict]:
-    rows, us = _timed(whatif.fig6_sim_vs_measured)
-    val = {"us": us}
-    for r in rows:
-        if r["bandwidth_gbps"] <= 10:
-            # low bw: simulated and measured-mode lines coincide (Fig 6)
-            val.setdefault("low_bw_agree", True)
-            if abs(r["simulated_full_util"] - r["measured_mode"]) > 0.08:
-                val["low_bw_agree"] = False
-        if r["bandwidth_gbps"] == 100:
-            val.setdefault("high_bw_diverge", False)
-            if r["simulated_full_util"] - r["measured_mode"] > 0.15:
-                val["high_bw_diverge"] = True
-    return rows, val
-
-
-def fig7_scaling_vs_workers() -> Tuple[Rows, Dict]:
-    rows, us = _timed(whatif.fig7_scaling_vs_workers)
-    # paper: full-util scaling ~100 % even at 64 GPUs
-    worst = min(r["simulated"] for r in rows)
-    val = {"full_util_near_1_even_64gpus": worst > 0.97, "us": us}
-    return rows, val
-
-
-def fig8_compression() -> Tuple[Rows, Dict]:
-    rows, us = _timed(whatif.fig8_compression)
-    by = {(r["model"], r["bandwidth_gbps"], r["ratio"]): r["scaling"]
-          for r in rows}
-    val = {
-        # paper: 2-5x suffices at 10 Gbps for ResNets; ~10x for VGG16;
-        # compression unnecessary at 100 Gbps
-        "rn50_5x_10g": by[("resnet50", 10, 5)] > 0.95,
-        "vgg16_10x_10g": by[("vgg16", 10, 10)] > 0.95,
-        "no_need_at_100g": by[("vgg16", 100, 1)] > 0.97,
-        "100x_overkill": by[("resnet50", 10, 100)] - by[("resnet50", 10, 10)] < 0.02,
-        "us": us,
-    }
     return rows, val
 
 
@@ -126,30 +54,7 @@ def table_transmission() -> Tuple[Rows, Dict]:
     return rows, val
 
 
-def fig9_other_systems() -> Tuple[Rows, Dict]:
-    """Paper §4: the same what-if applied to SwitchML / parameter-server /
-    ByteScheduler (see repro.core.whatif)."""
-    rows, us = _timed(whatif.fig9_other_systems)
-    val = {"us": us}
-    for r in rows:
-        val.setdefault("switchml_never_worse", True)
-        if r["switchml"] < r["ring"] - 1e-9:
-            val["switchml_never_worse"] = False
+def bytescheduler_bound() -> Tuple[Dict, bool]:
+    """The §4 ByteScheduler upper bound and its single pass criterion."""
     bs = whatif.bytescheduler_whatif("vgg16", 10)
-    rows.append(bs)
-    val["bytescheduler_bound_helps"] = (
-        bs["bytescheduler_bound"] >= bs["baseline"])
-    return rows, val
-
-
-ALL_FIGURES = {
-    "fig1_scaling_vs_servers": fig1_scaling_vs_servers,
-    "fig2_computation_time": fig2_computation_time,
-    "fig3_scaling_vs_bandwidth": fig3_scaling_vs_bandwidth,
-    "fig4_utilization": fig4_utilization,
-    "fig6_sim_vs_measured": fig6_sim_vs_measured,
-    "fig7_scaling_vs_workers": fig7_scaling_vs_workers,
-    "fig8_compression": fig8_compression,
-    "fig9_other_systems": fig9_other_systems,
-    "table_transmission": table_transmission,
-}
+    return bs, bs["bytescheduler_bound"] >= bs["baseline"]

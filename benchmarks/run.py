@@ -21,12 +21,49 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 def main() -> int:
     failures = 0
 
-    # -- 1. paper figures ---------------------------------------------------
-    from benchmarks.figures import ALL_FIGURES
+    # -- 1. paper figures (experiment engine -> artifact -> report) ---------
+    import time
+
+    from repro.experiments import artifacts, compare, grids, run_suite
+
     print("=" * 72)
-    print("SECTION 1: paper figure reproductions (what-if simulator)")
+    print("SECTION 1: paper figure reproductions (experiment engine)")
     print("=" * 72)
-    for name, fn in ALL_FIGURES.items():
+    art_path = Path(__file__).resolve().parent.parent / "artifacts" / \
+        "experiments" / "paper.json"
+    t0 = time.perf_counter()
+    records = run_suite(grids.resolve("paper"))
+    suite_us = (time.perf_counter() - t0) * 1e6
+    art = artifacts.write(art_path, records, meta={"grid": "paper"})
+    print(f"suite artifact: {art_path} ({suite_us:.0f} us total)")
+    for ex in art["experiments"]:
+        val = ex["validations"]
+        ok = all(val.values())
+        failures += 0 if ok else 1
+        print(f"\n{ex['name']},{len(ex['cells'])}cells,"
+              f"{'PASS' if ok else 'FAIL'}")
+        for k, v in val.items():
+            print(f"  check {k}: {'ok' if v else 'FAIL'}")
+        for c in ex["cells"][:6]:
+            print(f"  {c['model']},srv={c['n_servers']},"
+                  f"bw={c['bandwidth_gbps']:g},{c['transport']},"
+                  f"r={c['compression_ratio']:g},{c['topology']}: "
+                  f"f_sim={c['scaling_factor']:.4f} "
+                  f"util={c['network_utilization']:.3f}")
+        if len(ex["cells"]) > 6:
+            print(f"  ... ({len(ex['cells'])} cells total)")
+
+    golden = Path(__file__).resolve().parent.parent / "artifacts" / \
+        "golden" / "paper_suite.json"
+    if golden.exists():
+        report = compare(artifacts.read(golden), art)
+        failures += 0 if report.ok else 1
+        print(f"\ngolden-artifact gate: {report.summary()}")
+
+    # non-sweep figures keep their direct analyses
+    from benchmarks.figures import fig2_computation_time, table_transmission
+    for name, fn in (("fig2_computation_time", fig2_computation_time),
+                     ("table_transmission", table_transmission)):
         rows, val = fn()
         us = val.pop("us", 0.0)
         ok = all(bool(v) for v in val.values())
@@ -38,6 +75,11 @@ def main() -> int:
             print(f"  {r}")
         if len(rows) > 6:
             print(f"  ... ({len(rows)} rows total)")
+    from benchmarks.figures import bytescheduler_bound
+    bs, bs_ok = bytescheduler_bound()
+    failures += 0 if bs_ok else 1
+    print(f"\nbytescheduler_whatif,0,{'PASS' if bs_ok else 'FAIL'}")
+    print(f"  {bs}")
 
     # -- 2. kernels -----------------------------------------------------------
     print("\n" + "=" * 72)

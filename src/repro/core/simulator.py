@@ -25,6 +25,14 @@ from repro.core.timeline import GradTimeline
 from repro.core.transport import Transport, get_transport
 
 
+BUCKET_FIELDS = ("flush_time", "size", "n_tensors", "start", "end")
+
+# scalar SimResult fields, in stable serialization order (artifact schema)
+RESULT_FIELDS = ("name", "n_workers", "bandwidth", "effective_bw", "t_batch",
+                 "t_back", "t_sync", "t_overhead", "scaling_factor",
+                 "wire_bytes_per_worker", "network_utilization")
+
+
 @dataclass(frozen=True)
 class Bucket:
     flush_time: float        # when the backward process hands it over
@@ -32,6 +40,13 @@ class Bucket:
     n_tensors: int = 1       # gradient tensors fused into this bucket
     start: float = 0.0       # all-reduce start (filled by the server loop)
     end: float = 0.0
+
+    def to_dict(self) -> dict:
+        return {f: getattr(self, f) for f in BUCKET_FIELDS}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Bucket":
+        return Bucket(**{f: d[f] for f in BUCKET_FIELDS})
 
 
 @dataclass(frozen=True)
@@ -53,6 +68,23 @@ class SimResult:
         return (f"{self.name}: n={self.n_workers} bw={self.bandwidth*8/1e9:.0f}Gbps "
                 f"f_sim={self.scaling_factor:.3f} overhead={self.t_overhead*1e3:.1f}ms "
                 f"util={self.network_utilization:.2f}")
+
+    def to_dict(self, include_buckets: bool = False) -> dict:
+        """Stable JSON-ready form (the experiment-artifact cell schema).
+
+        Buckets are summarized by count unless ``include_buckets``; full
+        float repr round-trips through JSON bit-exactly either way.
+        """
+        d = {f: getattr(self, f) for f in RESULT_FIELDS}
+        d["n_buckets"] = len(self.buckets)
+        if include_buckets:
+            d["buckets"] = [b.to_dict() for b in self.buckets]
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "SimResult":
+        buckets = tuple(Bucket.from_dict(b) for b in d.get("buckets", ()))
+        return SimResult(**{f: d[f] for f in RESULT_FIELDS}, buckets=buckets)
 
 
 def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:

@@ -32,80 +32,144 @@ def sim_scaling(model: str, *, n_servers: int = 8, bandwidth_gbps: float = 100.0
 
 
 # ---------------------------------------------------------------------------
-# figure reproductions
+# figure reproductions — thin spec builders over the experiment engine
+# (repro.experiments); each returns the same row dicts as the historical
+# per-figure loops, sourced from engine cells.
 # ---------------------------------------------------------------------------
 
-def fig1_scaling_vs_servers(models: Sequence[str] = PAPER_MODELS,
-                            servers: Sequence[int] = (2, 4, 8),
-                            bandwidth_gbps: float = 100.0) -> List[Dict]:
+def _grid(name: str, **overrides):
+    """The registered paper grid, with any swept axis overridden.
+
+    Defaults come from ``repro.experiments.grids`` — the single source of
+    truth the golden artifact is built from — so these builders cannot
+    drift from the committed sweep definitions.
+    """
+    import dataclasses
+
+    from repro.experiments import GRIDS
+    if not overrides:
+        return GRIDS[name]
+    # a custom sweep is not the registered grid: rename it so the engine
+    # doesn't apply the grid's paper-claim validators to a partial sweep
+    return dataclasses.replace(GRIDS[name], name=f"{name}-custom",
+                               **overrides)
+
+
+def _cells(spec) -> Dict[tuple, Dict]:
+    """Run a grid and index its cells by (model, servers, bw, transport,
+    ratio, topology)."""
+    from repro.experiments import index_cells, run_spec
+    return index_cells(run_spec(spec)["cells"])
+
+
+def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
+                            servers: Optional[Sequence[int]] = None,
+                            bandwidth_gbps: Optional[float] = None) -> List[Dict]:
     """Measured-mode scaling factors (horovod_tcp transport)."""
+    spec = _grid("paper-fig1",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if servers is None else dict(n_servers=tuple(servers))),
+                 **({} if bandwidth_gbps is None
+                    else dict(bandwidth_gbps=(float(bandwidth_gbps),))))
+    ix = _cells(spec)
+    bw = spec.bandwidth_gbps[0]
     return [dict(model=m, servers=n,
-                 scaling=sim_scaling(m, n_servers=n,
-                                     bandwidth_gbps=bandwidth_gbps,
-                                     transport="horovod_tcp").scaling_factor)
-            for m in models for n in servers]
+                 scaling=ix[(m, n, bw, "horovod_tcp", 1.0, "ring")]
+                 ["scaling_factor"])
+            for m in spec.models for n in spec.n_servers]
 
 
-def fig3_scaling_vs_bandwidth(model: str = "resnet50",
-                              servers: Sequence[int] = (2, 4, 8),
-                              bws: Sequence[float] = (1, 2, 5, 10, 25, 50, 75, 100),
-                              transport: str = "horovod_tcp") -> List[Dict]:
-    return [dict(model=model, servers=n, bandwidth_gbps=bw,
-                 scaling=sim_scaling(model, n_servers=n, bandwidth_gbps=bw,
-                                     transport=transport).scaling_factor)
-            for n in servers for bw in bws]
+def fig3_scaling_vs_bandwidth(model: Optional[str] = None,
+                              servers: Optional[Sequence[int]] = None,
+                              bws: Optional[Sequence[float]] = None,
+                              transport: Optional[str] = None) -> List[Dict]:
+    spec = _grid("paper-fig3",
+                 **({} if model is None else dict(models=(model,))),
+                 **({} if servers is None else dict(n_servers=tuple(servers))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if transport is None else dict(transport=(transport,))))
+    ix = _cells(spec)
+    tr = spec.transport[0]
+    return [dict(model=spec.models[0], servers=n, bandwidth_gbps=bw,
+                 scaling=ix[(spec.models[0], n, bw, tr, 1.0, "ring")]
+                 ["scaling_factor"])
+            for n in spec.n_servers for bw in spec.bandwidth_gbps]
 
 
-def fig4_utilization(models: Sequence[str] = PAPER_MODELS,
-                     bws: Sequence[float] = (1, 10, 25, 50, 100),
-                     transport: str = "horovod_tcp") -> List[Dict]:
-    out = []
-    for m in models:
-        for bw in bws:
-            r = sim_scaling(m, bandwidth_gbps=bw, transport=transport)
-            out.append(dict(model=m, bandwidth_gbps=bw,
-                            utilization=r.network_utilization,
-                            effective_gbps=r.effective_bw / GBPS))
-    return out
+def fig4_utilization(models: Optional[Sequence[str]] = None,
+                     bws: Optional[Sequence[float]] = None,
+                     transport: Optional[str] = None) -> List[Dict]:
+    spec = _grid("paper-fig4",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if transport is None else dict(transport=(transport,))))
+    ix = _cells(spec)
+    n, tr = spec.n_servers[0], spec.transport[0]
+    return [dict(model=m, bandwidth_gbps=bw,
+                 utilization=ix[(m, n, bw, tr, 1.0, "ring")]
+                 ["network_utilization"],
+                 effective_gbps=ix[(m, n, bw, tr, 1.0, "ring")]
+                 ["effective_gbps"])
+            for m in spec.models for bw in spec.bandwidth_gbps]
 
 
-def fig6_sim_vs_measured(models: Sequence[str] = PAPER_MODELS,
-                         bws: Sequence[float] = (1, 10, 25, 50, 100),
-                         n_servers: int = 8) -> List[Dict]:
-    out = []
-    for m in models:
-        for bw in bws:
-            ideal = sim_scaling(m, n_servers=n_servers, bandwidth_gbps=bw,
-                                transport="ideal").scaling_factor
-            meas = sim_scaling(m, n_servers=n_servers, bandwidth_gbps=bw,
-                               transport="horovod_tcp").scaling_factor
-            out.append(dict(model=m, bandwidth_gbps=bw,
-                            simulated_full_util=ideal, measured_mode=meas))
-    return out
+def fig6_sim_vs_measured(models: Optional[Sequence[str]] = None,
+                         bws: Optional[Sequence[float]] = None,
+                         n_servers: Optional[int] = None) -> List[Dict]:
+    spec = _grid("paper-fig6",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if n_servers is None
+                    else dict(n_servers=(n_servers,))))
+    ix = _cells(spec)
+    n = spec.n_servers[0]
+    return [dict(model=m, bandwidth_gbps=bw,
+                 simulated_full_util=ix[(m, n, bw, "ideal",
+                                         1.0, "ring")]["scaling_factor"],
+                 measured_mode=ix[(m, n, bw, "horovod_tcp",
+                                   1.0, "ring")]["scaling_factor"])
+            for m in spec.models for bw in spec.bandwidth_gbps]
 
 
-def fig7_scaling_vs_workers(models: Sequence[str] = PAPER_MODELS,
-                            servers: Sequence[int] = (1, 2, 4, 8),
-                            bandwidth_gbps: float = 100.0) -> List[Dict]:
+def fig7_scaling_vs_workers(models: Optional[Sequence[str]] = None,
+                            servers: Optional[Sequence[int]] = None,
+                            bandwidth_gbps: Optional[float] = None) -> List[Dict]:
+    spec = _grid("paper-fig7",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if servers is None else dict(n_servers=tuple(servers))),
+                 **({} if bandwidth_gbps is None
+                    else dict(bandwidth_gbps=(float(bandwidth_gbps),))))
+    ix = _cells(spec)
+    bw = spec.bandwidth_gbps[0]
     return [dict(model=m, servers=n, gpus=n * GPUS_PER_SERVER,
-                 simulated=sim_scaling(m, n_servers=n,
-                                       bandwidth_gbps=bandwidth_gbps,
-                                       transport="ideal").scaling_factor,
-                 measured_mode=sim_scaling(m, n_servers=n,
-                                           bandwidth_gbps=bandwidth_gbps,
-                                           transport="horovod_tcp").scaling_factor)
-            for m in models for n in servers]
+                 simulated=ix[(m, n, bw, "ideal", 1.0, "ring")]
+                 ["scaling_factor"],
+                 measured_mode=ix[(m, n, bw, "horovod_tcp", 1.0, "ring")]
+                 ["scaling_factor"])
+            for m in spec.models for n in spec.n_servers]
 
 
-def fig8_compression(models: Sequence[str] = PAPER_MODELS,
-                     ratios: Sequence[float] = (1, 2, 5, 10, 100),
-                     bws: Sequence[float] = (10, 100),
-                     n_servers: int = 8) -> List[Dict]:
+def fig8_compression(models: Optional[Sequence[str]] = None,
+                     ratios: Optional[Sequence[float]] = None,
+                     bws: Optional[Sequence[float]] = None,
+                     n_servers: Optional[int] = None) -> List[Dict]:
+    spec = _grid("paper-fig8",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if ratios is None
+                    else dict(compression_ratio=tuple(float(r) for r in ratios))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if n_servers is None
+                    else dict(n_servers=(n_servers,))))
+    ix = _cells(spec)
+    n = spec.n_servers[0]
     return [dict(model=m, bandwidth_gbps=bw, ratio=r,
-                 scaling=sim_scaling(m, n_servers=n_servers, bandwidth_gbps=bw,
-                                     transport="ideal",
-                                     compression_ratio=r).scaling_factor)
-            for m in models for bw in bws for r in ratios]
+                 scaling=ix[(m, n, bw, "ideal", r, "ring")]["scaling_factor"])
+            for m in spec.models for bw in spec.bandwidth_gbps
+            for r in spec.compression_ratio]
 
 
 def transmission_table(bandwidth_gbps: float = 100.0) -> List[Dict]:
@@ -120,22 +184,27 @@ def transmission_table(bandwidth_gbps: float = 100.0) -> List[Dict]:
     return out
 
 
-def fig9_other_systems(models: Sequence[str] = PAPER_MODELS,
-                       bws: Sequence[float] = (10, 25, 100),
-                       n_servers: int = 8) -> List[Dict]:
+def fig9_other_systems(models: Optional[Sequence[str]] = None,
+                       bws: Optional[Sequence[float]] = None,
+                       n_servers: Optional[int] = None) -> List[Dict]:
     """Paper §4 ("What-if analysis for other approaches"): apply the same
     full-utilization what-if to SwitchML-style in-network aggregation and a
     sharded parameter server, against ring all-reduce."""
+    spec = _grid("paper-fig9",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if n_servers is None
+                    else dict(n_servers=(n_servers,))))
+    ix = _cells(spec)
+    n = spec.n_servers[0]
     out = []
-    for m in models:
-        tl = paper_timeline(m)
-        for bw in bws:
+    for m in spec.models:
+        for bw in spec.bandwidth_gbps:
             row = dict(model=m, bandwidth_gbps=bw)
-            for topo in ("ring", "switchml", "param_server"):
-                r = simulate(tl, n_workers=n_servers * GPUS_PER_SERVER,
-                             bandwidth=bw * GBPS, transport="ideal",
-                             topology=topo)
-                row[topo] = r.scaling_factor
+            for topo in spec.topology:
+                row[topo] = ix[(m, n, bw, "ideal", 1.0, topo)
+                               ]["scaling_factor"]
             out.append(row)
     return out
 

@@ -1,0 +1,21 @@
+"""Declarative experiment engine for the paper's sweep methodology.
+
+- :mod:`repro.experiments.spec`      — ``ExperimentSpec`` / ``Cell`` grids
+- :mod:`repro.experiments.grids`     — named paper grids + suites
+- :mod:`repro.experiments.runner`    — concurrent fan-out over the simulator
+- :mod:`repro.experiments.artifacts` — versioned JSON artifact I/O
+- :mod:`repro.experiments.compare`   — tolerance-gated artifact diffing
+- :mod:`repro.experiments.cli`       — ``python -m repro.experiments``
+"""
+from repro.experiments.spec import CELL_AXES, Cell, ExperimentSpec
+from repro.experiments.grids import GRIDS, SUITES, resolve
+from repro.experiments.runner import (ENGINE_VERSION, index_cells, run_cell,
+                                      run_spec, run_suite)
+from repro.experiments.compare import CompareReport, Violation, compare
+from repro.experiments import artifacts
+
+__all__ = [
+    "CELL_AXES", "Cell", "ExperimentSpec", "GRIDS", "SUITES", "resolve",
+    "ENGINE_VERSION", "index_cells", "run_cell", "run_spec", "run_suite",
+    "CompareReport", "Violation", "compare", "artifacts",
+]

@@ -1,0 +1,78 @@
+"""Named sweep grids — one per paper figure, plus suite aliases.
+
+These are the declarative replacements for the old imperative loops in
+``repro.core.whatif``: each grid is exactly the figure's sweep, and the
+``paper`` suite is what the committed golden artifact (and the CI
+sim-regression job) runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.experiments.spec import ExperimentSpec
+
+PAPER_MODELS = ("resnet50", "resnet101", "vgg16")
+
+GRIDS: Dict[str, ExperimentSpec] = {}
+
+
+def _register(spec: ExperimentSpec) -> ExperimentSpec:
+    GRIDS[spec.name] = spec
+    return spec
+
+
+# Fig 1: measured-mode scaling factor vs number of servers at 100 Gbps.
+_register(ExperimentSpec(
+    name="paper-fig1", models=PAPER_MODELS, n_servers=(2, 4, 8),
+    bandwidth_gbps=(100.0,), transport=("horovod_tcp",)))
+
+# Fig 3: ResNet-50 scaling vs bandwidth, per server count (measured mode).
+_register(ExperimentSpec(
+    name="paper-fig3", models=("resnet50",), n_servers=(2, 4, 8),
+    bandwidth_gbps=(1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 75.0, 100.0),
+    transport=("horovod_tcp",)))
+
+# Fig 4: network utilization during the communication phase, 8 servers.
+_register(ExperimentSpec(
+    name="paper-fig4", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(1.0, 10.0, 25.0, 50.0, 100.0),
+    transport=("horovod_tcp",)))
+
+# Fig 6: simulated-full-utilization vs measured-mode lines, 8 servers.
+_register(ExperimentSpec(
+    name="paper-fig6", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(1.0, 10.0, 25.0, 50.0, 100.0),
+    transport=("ideal", "horovod_tcp")))
+
+# Fig 7: scaling vs worker count at 100 Gbps, both transports.
+_register(ExperimentSpec(
+    name="paper-fig7", models=PAPER_MODELS, n_servers=(1, 2, 4, 8),
+    bandwidth_gbps=(100.0,), transport=("ideal", "horovod_tcp")))
+
+# Fig 8: gradient compression under full utilization.
+_register(ExperimentSpec(
+    name="paper-fig8", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(10.0, 100.0), transport=("ideal",),
+    compression_ratio=(1.0, 2.0, 5.0, 10.0, 100.0)))
+
+# §4 other systems: ring vs SwitchML vs sharded parameter server (what-if).
+_register(ExperimentSpec(
+    name="paper-fig9", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(10.0, 25.0, 100.0), transport=("ideal",),
+    topology=("ring", "switchml", "param_server")))
+
+# Suites: ordered grid groups runnable/comparable as one artifact.
+SUITES: Dict[str, Tuple[str, ...]] = {
+    "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
+              "paper-fig7", "paper-fig8", "paper-fig9"),
+}
+
+
+def resolve(name: str) -> Tuple[ExperimentSpec, ...]:
+    """A grid name resolves to one spec; a suite name to its ordered specs."""
+    if name in SUITES:
+        return tuple(GRIDS[g] for g in SUITES[name])
+    if name in GRIDS:
+        return (GRIDS[name],)
+    known = sorted(GRIDS) + sorted(SUITES)
+    raise KeyError(f"unknown grid/suite {name!r}; known: {', '.join(known)}")

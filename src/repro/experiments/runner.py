@@ -1,0 +1,100 @@
+"""Grid execution: fan an expanded spec out over the what-if simulator.
+
+``run_spec`` maps every :class:`~repro.experiments.spec.Cell` through
+``repro.core.simulator.simulate`` via ``concurrent.futures`` (threads by
+default — each cell is a few ms of pure Python — or processes for large
+grids) and returns one *experiment record*: spec + spec hash + per-cell
+``SimResult`` fields + paper-claim validations.  Records are plain dicts so
+``artifacts.write`` can dump them untouched.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.addest import AddEst
+from repro.core.simulator import simulate
+from repro.core.transport import GBPS
+from repro.configs.base import CommConfig
+from repro.experiments.spec import Cell, ExperimentSpec
+
+ENGINE_VERSION = 1
+
+_ADDEST = {"v100": AddEst.v100, "tpu_v5e": AddEst.tpu_v5e}
+
+
+@lru_cache(maxsize=32)
+def _timeline(model: str):
+    from repro.core.timeline import from_cnn
+    return from_cnn(model)
+
+
+def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
+    """Simulate one grid cell.  Must match ``whatif.sim_scaling`` exactly:
+    same timeline, worker count, AddEst, and CommConfig as the historical
+    per-figure loops, so golden artifacts are comparable at 1e-9."""
+    r = simulate(
+        _timeline(cell.model),
+        n_workers=cell.n_servers * spec.gpus_per_server,
+        bandwidth=cell.bandwidth_gbps * GBPS,
+        transport=cell.transport,
+        compression_ratio=cell.compression_ratio,
+        topology=cell.topology,
+        comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
+                        timeout_ms=spec.timeout_ms),
+        addest=_ADDEST[spec.addest]())
+    out = cell.to_dict()
+    out.update(r.to_dict())
+    # effective bandwidth in the sweep's own unit, for readable artifacts
+    out["effective_gbps"] = r.effective_bw / GBPS
+    # numpy scalars (np.float64 creeps in via the timeline arrays) become
+    # plain Python types so artifacts are pure JSON
+    return {k: float(v) if isinstance(v, float) else v
+            for k, v in out.items()}
+
+
+def _run_cell_from_dicts(spec_d: Dict, cell_d: Dict) -> Dict:
+    # module-level picklable entry point for ProcessPoolExecutor
+    return run_cell(ExperimentSpec.from_dict(spec_d), Cell.from_dict(cell_d))
+
+
+def run_spec(spec: ExperimentSpec, *, executor: str = "thread",
+             max_workers: Optional[int] = None) -> Dict:
+    """Expand and run one grid; returns the experiment record."""
+    cells = spec.expand()
+    if executor == "serial" or len(cells) <= 1:
+        results = [run_cell(spec, c) for c in cells]
+    elif executor == "process":
+        spec_d = spec.to_dict()
+        with ProcessPoolExecutor(max_workers=max_workers) as pool:
+            results = list(pool.map(_run_cell_from_dicts,
+                                    [spec_d] * len(cells),
+                                    [c.to_dict() for c in cells]))
+    elif executor == "thread":
+        with ThreadPoolExecutor(max_workers=max_workers) as pool:
+            results = list(pool.map(lambda c: run_cell(spec, c), cells))
+    else:
+        raise ValueError(f"unknown executor {executor!r}")
+
+    from repro.experiments.validations import validate
+    return {
+        "name": spec.name,
+        "engine_version": ENGINE_VERSION,
+        "spec": spec.to_dict(),
+        "spec_hash": spec.spec_hash(),
+        "cells": results,
+        "validations": validate(spec.name, results),
+    }
+
+
+def run_suite(specs: Sequence[ExperimentSpec], *, executor: str = "thread",
+              max_workers: Optional[int] = None) -> List[Dict]:
+    return [run_spec(s, executor=executor, max_workers=max_workers)
+            for s in specs]
+
+
+def index_cells(cells: Sequence[Dict]) -> Dict[tuple, Dict]:
+    """Cell list -> {(model, n_servers, bw, transport, ratio, topo): cell}."""
+    from repro.experiments.spec import CELL_AXES
+    return {tuple(c[a] for a in CELL_AXES): c for c in cells}

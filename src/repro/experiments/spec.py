@@ -1,0 +1,111 @@
+"""Declarative experiment specs — the paper's sweep methodology as data.
+
+An :class:`ExperimentSpec` names a cartesian grid over the simulator's axes
+(model x servers x bandwidth x transport x compression x topology); the
+runner fans the expanded cells out over ``repro.core.simulator.simulate``.
+Specs are canonically serializable (sorted-key JSON) and content-addressed
+via :meth:`ExperimentSpec.spec_hash`, so an artifact records exactly which
+grid produced it and ``compare`` can refuse to diff mismatched sweeps.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field, fields
+from itertools import product
+from typing import Dict, Sequence, Tuple
+
+SPEC_VERSION = 1
+
+# axis order is part of the stable cell identity — never reorder
+CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
+             "compression_ratio", "topology")
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One point of an expanded grid (the arguments of a single simulate)."""
+
+    model: str
+    n_servers: int
+    bandwidth_gbps: float
+    transport: str
+    compression_ratio: float
+    topology: str
+
+    def key(self) -> Tuple:
+        return tuple(getattr(self, a) for a in CELL_AXES)
+
+    def to_dict(self) -> Dict:
+        return {a: getattr(self, a) for a in CELL_AXES}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Cell":
+        return Cell(**{a: d[a] for a in CELL_AXES})
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """A named sweep grid plus the fixed simulator context.
+
+    Axis fields hold the *values to sweep* (tuples); the remaining fields
+    (GPUs per server, add-estimator, fusion-buffer config) are held constant
+    across the grid, matching the paper's setup (p3dn.24xlarge, V100).
+    """
+
+    name: str
+    models: Tuple[str, ...] = ("resnet50", "resnet101", "vgg16")
+    n_servers: Tuple[int, ...] = (8,)
+    bandwidth_gbps: Tuple[float, ...] = (100.0,)
+    transport: Tuple[str, ...] = ("ideal",)
+    compression_ratio: Tuple[float, ...] = (1.0,)
+    topology: Tuple[str, ...] = ("ring",)
+    gpus_per_server: int = 8            # p3dn.24xlarge
+    addest: str = "v100"                # v100 | tpu_v5e
+    fusion_buffer_mb: float = 64.0      # paper's fusion buffer
+    timeout_ms: float = 5.0             # paper's fusion timeout
+
+    def __post_init__(self):
+        # tolerate lists (e.g. straight from JSON) by freezing to tuples
+        for f in ("models", "n_servers", "bandwidth_gbps", "transport",
+                  "compression_ratio", "topology"):
+            v = getattr(self, f)
+            if not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(v))
+
+    # -- grid expansion ------------------------------------------------------
+
+    def expand(self) -> Tuple[Cell, ...]:
+        """Cartesian product in stable axis order (model outermost)."""
+        return tuple(Cell(m, int(n), float(bw), t, float(r), topo)
+                     for m, n, bw, t, r, topo in product(
+                         self.models, self.n_servers, self.bandwidth_gbps,
+                         self.transport, self.compression_ratio,
+                         self.topology))
+
+    @property
+    def n_cells(self) -> int:
+        return (len(self.models) * len(self.n_servers)
+                * len(self.bandwidth_gbps) * len(self.transport)
+                * len(self.compression_ratio) * len(self.topology))
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d["spec_version"] = SPEC_VERSION
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict) -> "ExperimentSpec":
+        d = dict(d)
+        d.pop("spec_version", None)
+        known = {f.name for f in fields(ExperimentSpec)}
+        return ExperimentSpec(**{k: v for k, v in d.items() if k in known})
+
+    def canonical_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def spec_hash(self) -> str:
+        return hashlib.sha256(self.canonical_json().encode()).hexdigest()[:16]

@@ -1,0 +1,105 @@
+"""Paper-claim checks, evaluated on experiment cells and stored in artifacts.
+
+These are the section-1 validations that used to live inline in
+``benchmarks/figures.py``; moving them into the engine means every artifact
+carries its own pass/fail record and ``compare`` can flag a claim that a
+refactor silently broke (a True that became False is a regression even if
+no numeric tolerance trips).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+Check = Dict[str, bool]
+
+
+def _by(cells: Sequence[Dict], *axes: str, value: str = "scaling_factor"):
+    return {tuple(c[a] for a in axes): c[value] for c in cells}
+
+
+def _fig1(cells: Sequence[Dict]) -> Check:
+    by = _by(cells, "model", "n_servers")
+    # paper §2.2: RN50/RN101/VGG16 = 75/69/56 % @2 servers; none exceeds 76 %
+    return {
+        "rn50_2srv_in_[0.6,0.9]": 0.60 <= by[("resnet50", 2)] <= 0.90,
+        "vgg16_worst": by[("vgg16", 2)] < by[("resnet50", 2)],
+        "no_linear_scaling": max(by.values()) < 0.85,
+    }
+
+
+def _fig3(cells: Sequence[Dict]) -> Check:
+    by = _by(cells, "n_servers", "bandwidth_gbps")
+    # paper: 2-server RN50 grows 13 % -> ~68 % from 1 to 10 Gbps, then
+    # plateaus after 25 Gbps (measured transport)
+    return {
+        "low_bw_poor": by[(2, 1.0)] < 0.25,
+        "grows_to_10g": by[(2, 10.0)] > 3 * by[(2, 1.0)],
+        "plateau_after_25g": (by[(2, 100.0)] - by[(2, 25.0)]) < 0.15,
+    }
+
+
+def _fig4(cells: Sequence[Dict]) -> Check:
+    util = _by(cells, "model", "bandwidth_gbps", value="network_utilization")
+    eff = _by(cells, "model", "bandwidth_gbps", value="effective_gbps")
+    return {
+        "full_util_at_1g": util[("resnet50", 1.0)] > 0.9,
+        "low_util_at_100g": eff[("resnet50", 100.0)] < 32.0,
+    }
+
+
+def _fig6(cells: Sequence[Dict]) -> Check:
+    by = _by(cells, "model", "bandwidth_gbps", "transport")
+    low_bw_agree, high_bw_diverge = True, False
+    for (m, bw, t), f in by.items():
+        if t != "ideal":
+            continue
+        meas = by[(m, bw, "horovod_tcp")]
+        if bw <= 10 and abs(f - meas) > 0.08:
+            low_bw_agree = False       # Fig 6: the lines coincide at low bw
+        if bw == 100 and f - meas > 0.15:
+            high_bw_diverge = True     # ...and split at 100 Gbps
+    return {"low_bw_agree": low_bw_agree, "high_bw_diverge": high_bw_diverge}
+
+
+def _fig7(cells: Sequence[Dict]) -> Check:
+    # paper: full-util scaling ~100 % even at 64 GPUs
+    worst = min(c["scaling_factor"] for c in cells
+                if c["transport"] == "ideal")
+    return {"full_util_near_1_even_64gpus": worst > 0.97}
+
+
+def _fig8(cells: Sequence[Dict]) -> Check:
+    by = _by(cells, "model", "bandwidth_gbps", "compression_ratio")
+    # paper: 2-5x suffices at 10 Gbps for ResNets; ~10x for VGG16;
+    # compression unnecessary at 100 Gbps
+    return {
+        "rn50_5x_10g": by[("resnet50", 10.0, 5.0)] > 0.95,
+        "vgg16_10x_10g": by[("vgg16", 10.0, 10.0)] > 0.95,
+        "no_need_at_100g": by[("vgg16", 100.0, 1.0)] > 0.97,
+        "100x_overkill": (by[("resnet50", 10.0, 100.0)]
+                          - by[("resnet50", 10.0, 10.0)]) < 0.02,
+    }
+
+
+def _fig9(cells: Sequence[Dict]) -> Check:
+    by = _by(cells, "model", "bandwidth_gbps", "topology")
+    ok = all(by[(m, bw, "switchml")] >= by[(m, bw, "ring")] - 1e-9
+             for (m, bw, topo) in by if topo == "ring")
+    return {"switchml_never_worse": ok}
+
+
+VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
+    "paper-fig1": _fig1,
+    "paper-fig3": _fig3,
+    "paper-fig4": _fig4,
+    "paper-fig6": _fig6,
+    "paper-fig7": _fig7,
+    "paper-fig8": _fig8,
+    "paper-fig9": _fig9,
+}
+
+
+def validate(grid_name: str, cells: Sequence[Dict]) -> Check:
+    fn = VALIDATORS.get(grid_name)
+    # bool() strips numpy bool scalars, which are not JSON serializable
+    return {k: bool(v) for k, v in fn(cells).items()} if fn else {}

@@ -112,10 +112,13 @@ def _allreduce_mean(x: jnp.ndarray, axes) -> jnp.ndarray:
     return jax.lax.pmean(x, axes)
 
 
-def _hierarchical_mean(x: jnp.ndarray, ici_axis: str, dcn_axis: str | None
-                       ) -> jnp.ndarray:
-    """In-pod reduce-scatter -> cross-pod all-reduce -> in-pod all-gather."""
-    nd = jax.lax.axis_size(ici_axis)
+def _hierarchical_mean(x: jnp.ndarray, ici_axis: str, dcn_axis: str | None,
+                       nd: int, n_dcn: int) -> jnp.ndarray:
+    """In-pod reduce-scatter -> cross-pod all-reduce -> in-pod all-gather.
+
+    ``nd`` / ``n_dcn`` are the static mesh sizes of the two axes (jax.lax
+    has no axis_size query on this version; the caller knows the mesh).
+    """
     pad = (-x.shape[0]) % nd
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
@@ -127,16 +130,14 @@ def _hierarchical_mean(x: jnp.ndarray, ici_axis: str, dcn_axis: str | None
     full = full.reshape(-1)
     if pad:
         full = full[:-pad]
-    n_total = nd * (jax.lax.axis_size(dcn_axis) if dcn_axis else 1)
+    n_total = nd * (n_dcn if dcn_axis else 1)
     return full / n_total
 
 
-def _compressed_mean(x: jnp.ndarray, comm: CommConfig, axes) -> jnp.ndarray:
+def _compressed_mean(x: jnp.ndarray, comm: CommConfig, axes,
+                     n_total: int) -> jnp.ndarray:
     """Horovod-compression semantics: all-gather compressed payloads, then
     one fused dequantize+reduce locally (Pallas ``fused_add``)."""
-    n_total = 1
-    for a in axes:
-        n_total *= jax.lax.axis_size(a)
     if comm.compression == "fp16":
         g = jax.lax.all_gather(x.astype(jnp.bfloat16), axes, axis=0,
                                tiled=False)
@@ -160,15 +161,20 @@ def _compressed_mean(x: jnp.ndarray, comm: CommConfig, axes) -> jnp.ndarray:
     raise ValueError(comm.compression)
 
 
-def _sync_bucket(x: jnp.ndarray, comm: CommConfig, axes: Tuple[str, ...]
-                 ) -> jnp.ndarray:
+def _sync_bucket(x: jnp.ndarray, comm: CommConfig, axes: Tuple[str, ...],
+                 axis_sizes: Tuple[int, ...]) -> jnp.ndarray:
     if comm.compression != "none":
-        return _compressed_mean(x, comm, axes)
+        n_total = 1
+        for s in axis_sizes:
+            n_total *= s
+        return _compressed_mean(x, comm, axes, n_total)
     if comm.hierarchical and len(axes) == 2:
         # axes = (pod, data): ICI inside the pod (data), DCN across (pod)
-        return _hierarchical_mean(x, ici_axis=axes[1], dcn_axis=axes[0])
+        return _hierarchical_mean(x, ici_axis=axes[1], dcn_axis=axes[0],
+                                  nd=axis_sizes[1], n_dcn=axis_sizes[0])
     if comm.hierarchical:
-        return _hierarchical_mean(x, ici_axis=axes[0], dcn_axis=None)
+        return _hierarchical_mean(x, ici_axis=axes[0], dcn_axis=None,
+                                  nd=axis_sizes[0], n_dcn=1)
     return _allreduce_mean(x, axes)
 
 
@@ -186,6 +192,7 @@ def sync_grads(grads: Any, mesh: Mesh, comm: CommConfig,
     analysis says it should be.
     """
     axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    axis_sizes = tuple(mesh.shape[a] for a in axes)
     plan, treedef = make_plan(grads, comm.fusion_buffer_mb)
     leaves = jax.tree_util.tree_leaves(grads)
 
@@ -197,7 +204,7 @@ def sync_grads(grads: Any, mesh: Mesh, comm: CommConfig,
                        check_rep=False)
     def run(*flat_leaves):
         buckets = pack(plan, flat_leaves)
-        synced = [_sync_bucket(b, comm, axes) for b in buckets]
+        synced = [_sync_bucket(b, comm, axes, axis_sizes) for b in buckets]
         return tuple(unpack(plan, synced))
 
     new_leaves = run(*leaves)

@@ -9,6 +9,10 @@ import pytest
 from repro.core.cnn_profiles import get_profile
 from repro.models.cnn import cnn_loss, get_cnn
 
+# interpret-mode Pallas / full-model tests: minutes of wall clock on CPU
+pytestmark = pytest.mark.slow
+
+
 
 def _count(params):
     return sum(int(p.size) for p in jax.tree_util.tree_leaves(params)

@@ -12,6 +12,10 @@ import pytest
 from repro.configs import get_config
 from repro.models.registry import get_model, pad_cache
 
+# interpret-mode Pallas / full-model tests: minutes of wall clock on CPU
+pytestmark = pytest.mark.slow
+
+
 # all ten assigned architectures (every decode path: GQA ring buffer, MLA
 # latent cache, RWKV recurrent state, Jamba hybrid, whisper enc-dec, MoE)
 ARCHS = ["stablelm-3b", "deepseek-v2-236b", "rwkv6-1.6b", "jamba-v0.1-52b",

@@ -1,0 +1,228 @@
+"""Experiment engine: grid expansion, artifact round-trip, regression
+gating, CLI exit codes, and golden transport-utilization values."""
+import json
+
+import pytest
+
+from repro.core.transport import GBPS, get_transport
+from repro.core.whatif import sim_scaling
+from repro.experiments import (GRIDS, SUITES, Cell, ExperimentSpec, artifacts,
+                               compare, grids, index_cells, run_cell,
+                               run_spec, run_suite)
+from repro.experiments.cli import main as cli_main
+
+
+# ---------------------------------------------------------------------------
+# spec / grid expansion
+# ---------------------------------------------------------------------------
+
+def test_expand_is_cartesian_product_in_stable_order():
+    spec = ExperimentSpec(name="t", models=("a", "b"), n_servers=(2, 4),
+                          bandwidth_gbps=(1.0, 10.0), transport=("ideal",))
+    cells = spec.expand()
+    assert len(cells) == spec.n_cells == 8
+    # model is the outermost axis, bandwidth the fastest-varying here
+    assert cells[0] == Cell("a", 2, 1.0, "ideal", 1.0, "ring")
+    assert cells[1] == Cell("a", 2, 10.0, "ideal", 1.0, "ring")
+    assert cells[-1] == Cell("b", 4, 10.0, "ideal", 1.0, "ring")
+    assert len({c.key() for c in cells}) == 8
+
+
+def test_spec_hash_stable_and_sensitive():
+    a = ExperimentSpec(name="t", bandwidth_gbps=(10.0,))
+    b = ExperimentSpec(name="t", bandwidth_gbps=(10.0,))
+    c = ExperimentSpec(name="t", bandwidth_gbps=(25.0,))
+    assert a.spec_hash() == b.spec_hash()
+    assert a.spec_hash() != c.spec_hash()
+
+
+def test_spec_round_trips_through_dict_and_accepts_lists():
+    spec = ExperimentSpec(name="t", models=["resnet50"], n_servers=[2])
+    assert spec.models == ("resnet50",)       # lists frozen to tuples
+    again = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+    assert again.spec_hash() == spec.spec_hash()
+
+
+def test_registered_grids_expand():
+    for name, spec in GRIDS.items():
+        assert spec.name == name
+        assert spec.n_cells == len(spec.expand()) > 0
+    assert set(SUITES["paper"]) <= set(GRIDS)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def test_run_cell_matches_whatif_sim_scaling():
+    spec = GRIDS["paper-fig1"]
+    cell = Cell("resnet50", 2, 100.0, "horovod_tcp", 1.0, "ring")
+    got = run_cell(spec, cell)
+    want = sim_scaling("resnet50", n_servers=2, bandwidth_gbps=100.0,
+                       transport="horovod_tcp")
+    assert got["scaling_factor"] == want.scaling_factor
+    assert got["t_sync"] == want.t_sync
+    assert got["n_buckets"] == len(want.buckets)
+
+
+@pytest.mark.parametrize("executor", ["serial", "thread"])
+def test_executors_agree_bitwise(executor):
+    spec = ExperimentSpec(name="t", models=("resnet50",), n_servers=(2, 8),
+                          bandwidth_gbps=(10.0, 100.0))
+    serial = run_spec(spec, executor="serial")
+    other = run_spec(spec, executor=executor)
+    assert serial["cells"] == other["cells"]
+    assert serial["spec_hash"] == other["spec_hash"]
+
+
+def test_validations_recorded_for_paper_grids():
+    rec = run_spec(GRIDS["paper-fig1"])
+    assert rec["validations"], "paper grids must carry claim checks"
+    assert all(isinstance(v, bool) for v in rec["validations"].values())
+
+
+# ---------------------------------------------------------------------------
+# artifacts: write -> read -> compare is a no-op
+# ---------------------------------------------------------------------------
+
+def _small_artifact(tmp_path, name="a.json"):
+    rec = run_spec(ExperimentSpec(name="small", models=("resnet50",),
+                                  n_servers=(2,), bandwidth_gbps=(10.0,)))
+    path = tmp_path / name
+    artifacts.write(path, [rec])
+    return path, rec
+
+
+def test_artifact_round_trip_compare_is_noop(tmp_path):
+    path, rec = _small_artifact(tmp_path)
+    art = artifacts.read(path)
+    assert art["schema_version"] == artifacts.SCHEMA_VERSION
+    assert art["experiments"][0]["cells"] == rec["cells"]
+    report = compare(art, art)
+    assert report.ok and report.n_cells == 1
+
+
+def test_artifact_write_is_deterministic(tmp_path):
+    p1, _ = _small_artifact(tmp_path, "a.json")
+    p2, _ = _small_artifact(tmp_path, "b.json")
+    assert p1.read_bytes() == p2.read_bytes()
+
+
+def test_artifact_read_rejects_garbage(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{\"kind\": \"something-else\"}")
+    with pytest.raises(artifacts.ArtifactError):
+        artifacts.read(p)
+    p.write_text("not json")
+    with pytest.raises(artifacts.ArtifactError):
+        artifacts.read(p)
+
+
+# ---------------------------------------------------------------------------
+# compare: tolerance violations, spec drift, claim flips
+# ---------------------------------------------------------------------------
+
+def test_compare_detects_value_drift(tmp_path):
+    path, rec = _small_artifact(tmp_path)
+    art = artifacts.read(path)
+    import copy
+    mutated = copy.deepcopy(art)
+    mutated["experiments"][0]["cells"][0]["scaling_factor"] += 1e-6
+    report = compare(art, mutated)
+    assert not report.ok
+    assert any(v.kind == "field" and "scaling_factor" in v.where
+               for v in report.violations)
+    # a loose explicit tolerance lets the same drift through
+    assert compare(art, mutated, tolerances={"scaling_factor": 1e-3}).ok
+
+
+def test_compare_detects_dropped_result_field(tmp_path):
+    """A schema regression that removes a result field must not silently
+    disable its drift gate."""
+    import copy
+    path, _ = _small_artifact(tmp_path)
+    art = artifacts.read(path)
+    shrunk = copy.deepcopy(art)
+    del shrunk["experiments"][0]["cells"][0]["t_sync"]
+    report = compare(art, shrunk)
+    assert not report.ok
+    assert any("t_sync" in v.where and "only in old" in v.detail
+               for v in report.violations)
+
+
+def test_compare_detects_spec_drift_and_missing_experiment(tmp_path):
+    rec_a = run_spec(ExperimentSpec(name="g", bandwidth_gbps=(10.0,),
+                                    models=("resnet50",), n_servers=(2,)))
+    rec_b = run_spec(ExperimentSpec(name="g", bandwidth_gbps=(25.0,),
+                                    models=("resnet50",), n_servers=(2,)))
+    art_a = artifacts.make_artifact([rec_a])
+    art_b = artifacts.make_artifact([rec_b])
+    report = compare(art_a, art_b)
+    assert not report.ok
+    assert any(v.kind == "spec" for v in report.violations)
+    report = compare(art_a, artifacts.make_artifact([]))
+    assert any("missing" in v.detail for v in report.violations)
+
+
+def test_compare_detects_claim_flip(tmp_path):
+    import copy
+    rec = run_spec(GRIDS["paper-fig1"])
+    art = artifacts.make_artifact([rec])
+    flipped = copy.deepcopy(art)
+    for k in flipped["experiments"][0]["validations"]:
+        flipped["experiments"][0]["validations"][k] = False
+    report = compare(art, flipped)
+    assert not report.ok
+    assert all(v.kind == "validation" for v in report.violations)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_run_compare_report_roundtrip(tmp_path, capsys):
+    out = tmp_path / "fig1.json"
+    assert cli_main(["run", "--grid", "paper-fig1", "--out", str(out)]) == 0
+    assert cli_main(["compare", str(out), str(out)]) == 0
+    assert cli_main(["report", str(out)]) == 0
+    assert cli_main(["list"]) == 0
+    text = capsys.readouterr().out
+    assert "paper-fig1" in text and "OK" in text
+
+
+def test_cli_compare_exits_nonzero_on_violation(tmp_path):
+    out = tmp_path / "fig1.json"
+    cli_main(["run", "--grid", "paper-fig1", "--out", str(out)])
+    art = artifacts.read(out)
+    art["experiments"][0]["cells"][0]["t_sync"] *= 1.01
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(art))
+    assert cli_main(["compare", str(out), str(bad)]) == 1
+
+
+def test_cli_unknown_grid_raises():
+    with pytest.raises(KeyError):
+        cli_main(["run", "--grid", "nope", "--out", "/dev/null"])
+
+
+# ---------------------------------------------------------------------------
+# golden transport values (the paper's calibrated horovod_tcp curve)
+# ---------------------------------------------------------------------------
+
+def test_transport_utilization_golden_values():
+    """utilization(bw) = cap / (bw^4 + cap^4)^(1/4), cap = 30 Gbps.
+
+    These literals gate the calibration: Fig. 4's "<32 Gbps at a 100 Gbps
+    NIC" claim lives or dies on this curve."""
+    tr = get_transport("horovod_tcp")
+    golden = {
+        10.0: 0.9969371768941204,
+        25.0: 0.906294635134345,
+        100.0: 0.29939555690739733,
+    }
+    for gbps, want in golden.items():
+        assert tr.utilization(gbps * GBPS) == pytest.approx(want, rel=1e-12)
+        assert tr.effective(gbps * GBPS) / GBPS == pytest.approx(
+            gbps * want, rel=1e-12)
+    assert get_transport("ideal").utilization(100 * GBPS) == 1.0

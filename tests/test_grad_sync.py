@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import CommConfig
 from repro.parallel.grad_sync import (BucketPlan, make_plan, pack, sync_grads,
@@ -125,7 +125,7 @@ for compression, hier in [("none", False), ("none", True), ("fp16", False),
         plan, tdef = make_plan(g, comm.fusion_buffer_mb)
         buckets = pack(plan, jax.tree_util.tree_leaves(g))
         axes = ("pod", "data")
-        synced = [_sync_bucket(x, comm, axes) for x in buckets]
+        synced = [_sync_bucket(x, comm, axes, (2, 4)) for x in buckets]
         out = unpack(plan, synced)
         return out[1][None, None], out[0][None, None]   # leaves sorted: b, w
 

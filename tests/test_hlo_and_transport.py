@@ -1,6 +1,6 @@
 """HLO collective parser and transport-curve tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.transport import GBPS, get_transport
 from repro.utils.hlo import collective_bytes, collective_counts
@@ -103,9 +103,12 @@ with mesh:
                               NamedSharding(mesh, P("data", None)))
                 ).lower(w, x).compile()
 a = analyze(c.as_text())
+ca = c.cost_analysis()
+if isinstance(ca, (list, tuple)):   # older jax returns one dict per program
+    ca = ca[0] if ca else {}
 print(json.dumps({"flops": a.flops, "trips": a.while_trips,
                   "coll": a.collective_bytes,
-                  "cost": c.cost_analysis().get("flops", 0.0)}))
+                  "cost": ca.get("flops", 0.0)}))
 '''
     repo = Path(__file__).resolve().parent.parent
     env = dict(os.environ, PYTHONPATH="src")

@@ -12,6 +12,10 @@ from repro.kernels.wkv import wkv_pallas
 from repro.models.attention import flash_attention as flash_jnp
 from repro.models.rwkv import wkv_chunked
 
+# interpret-mode Pallas / full-model tests: minutes of wall clock on CPU
+pytestmark = pytest.mark.slow
+
+
 
 def _tr(x):
     return x.transpose(0, 2, 1, 3)

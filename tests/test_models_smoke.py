@@ -8,6 +8,10 @@ from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.archs import ALL_ARCHS
 from repro.models.registry import get_model
 
+# interpret-mode Pallas / full-model tests: minutes of wall clock on CPU
+pytestmark = pytest.mark.slow
+
+
 B, S = 2, 64
 
 

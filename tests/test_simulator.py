@@ -3,7 +3,7 @@ buffer, property tests of simulator invariants, and checks of the paper's
 own numbers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import CommConfig
 from repro.core.addest import AddEst

@@ -8,6 +8,10 @@ import pytest
 from repro.configs import INPUT_SHAPES, get_config
 from repro.data.pipeline import Prefetcher, SyntheticLM
 
+# interpret-mode Pallas / full-model tests: minutes of wall clock on CPU
+pytestmark = pytest.mark.slow
+
+
 
 # ---------------------------------------------------------------------------
 # data
