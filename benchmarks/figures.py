@@ -58,3 +58,21 @@ def bytescheduler_bound() -> Tuple[Dict, bool]:
     """The §4 ByteScheduler upper bound and its single pass criterion."""
     bs = whatif.bytescheduler_whatif("vgg16", 10)
     return bs, bs["bytescheduler_bound"] >= bs["baseline"]
+
+
+def scheduler_contention() -> Tuple[Rows, Dict]:
+    """Two jobs on one link (the event engine's fair-share what-if): each
+    job must be no faster than when it owns the link, and the pipelined
+    scheduler must not make contention worse than fifo."""
+    rows, us = _timed(whatif.contention_whatif)
+    fifo = {r["model"]: r for r in rows}
+    rows_c, us2 = _timed(whatif.contention_whatif, scheduler="chunked")
+    chk = {r["model"]: r for r in rows_c}
+    val = {
+        "contention_never_speeds_up": all(
+            r["contended"] <= r["alone"] + 1e-9 for r in rows + rows_c),
+        "chunked_no_worse_under_contention": all(
+            chk[m]["contended"] >= fifo[m]["contended"] - 1e-9 for m in fifo),
+        "us": us + us2,
+    }
+    return rows + rows_c, val

@@ -60,6 +60,33 @@ def main() -> int:
         failures += 0 if report.ok else 1
         print(f"\ngolden-artifact gate: {report.summary()}")
 
+    # the scheduling axis the event engine opened (tentpole): fifo vs
+    # priority vs chunked over the paper bandwidths, gated by its own golden
+    sched_records = run_suite(grids.resolve("scheduler"))
+    sched_art = artifacts.make_artifact(sched_records)
+    for ex in sched_art["experiments"]:
+        val = ex["validations"]
+        ok = all(val.values())
+        failures += 0 if ok else 1
+        print(f"\n{ex['name']},{len(ex['cells'])}cells,"
+              f"{'PASS' if ok else 'FAIL'}")
+        for k, v in val.items():
+            print(f"  check {k}: {'ok' if v else 'FAIL'}")
+    sched_golden = golden.parent / "scheduler_suite.json"
+    if sched_golden.exists():
+        report = compare(artifacts.read(sched_golden), sched_art)
+        failures += 0 if report.ok else 1
+        print(f"scheduler-golden gate: {report.summary()}")
+
+    from benchmarks.figures import scheduler_contention
+    rows, cval = scheduler_contention()
+    cok = all(bool(v) for k, v in cval.items() if k != "us")
+    failures += 0 if cok else 1
+    print(f"\nscheduler_contention,{cval.get('us', 0):.0f},"
+          f"{'PASS' if cok else 'FAIL'}")
+    for r in rows:
+        print(f"  {r}")
+
     # non-sweep figures keep their direct analyses
     from benchmarks.figures import fig2_computation_time, table_transmission
     for name, fn in (("fig2_computation_time", fig2_computation_time),

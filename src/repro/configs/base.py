@@ -195,3 +195,5 @@ class CommConfig:
     compression: str = "none"        # none | fp16 | int8 | ternary | topk
     topk_ratio: float = 0.01         # kept fraction for topk
     mode: str = "auto"               # auto (pjit collectives) | explicit (shard_map)
+    scheduler: str = "fifo"          # comm schedule: fifo | priority | chunked
+    sched_chunks: int = 4            # chunks/bucket for the pipelined schedulers

@@ -1,3 +1,4 @@
 """The paper's primary contribution: scaling-factor methodology, gradient
-timelines, the two-process what-if simulator, transport curves, all-reduce
-cost models, and the per-figure what-if API."""
+timelines, the two-process what-if simulator (a discrete-event network
+engine executing a comm-schedule IR — ``events``/``schedule``), transport
+curves, all-reduce cost models, and the per-figure what-if API."""

@@ -1,0 +1,214 @@
+"""Discrete-event network engine: link resources with fair-share bandwidth.
+
+The serialized bucket loop the simulator used to hard-code is one point in
+a much larger scheduling space.  This engine executes *flows* — wire
+transfers with a fixed post-wire latency (the reduction/vector-add phase of
+a collective) — against named link resources:
+
+- **links** split their bandwidth fairly among concurrent flows (progressive
+  filling: each of the k active flows progresses at 1/k of full rate), which
+  is what makes multi-job contention expressible;
+- **jobs** serialize their own flows (one wire in flight per job): a ring
+  all-reduce occupies the full NIC, so intra-job concurrency happens at
+  chunk granularity via the scheduler that *ordered* the flows, not via the
+  link;
+- a job admits its highest-priority ready flow whenever it is free; a flow
+  with ``hold=True`` keeps the job busy through its latency (Horovod's
+  serialized all-reduce process), otherwise the job frees at wire end and
+  the latency overlaps the next flow's transmission (pipelined chunks).
+
+Exactness: a ``hold`` flow whose wire phase never shared its link completes
+at ``start + duration`` with ``duration`` precomputed by the caller as a
+single float expression — so the ``fifo`` schedule reproduces the legacy
+serialized loop bit-for-bit, not just within tolerance.
+
+Times in seconds; ``work`` is wire time at full link rate (the caller bakes
+bandwidth into it via the cost model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEFAULT_LINK = "nic"
+DEFAULT_JOB = "job0"
+
+
+@dataclass(frozen=True)
+class FlowSpec:
+    """One wire transfer plus a fixed post-wire latency.
+
+    ``priority`` orders admission within a job (smaller first; ties broken
+    by ``op_id``).  ``duration``, when given, must equal ``work + latency``
+    up to the caller's own float rounding — it is used verbatim for the
+    closed-form uncontended completion of ``hold`` flows.
+    """
+
+    op_id: int
+    ready: float                     # earliest admission time
+    work: float                      # wire seconds at full link rate
+    latency: float = 0.0             # fixed post-wire time (reduction etc.)
+    priority: float = 0.0
+    job: str = DEFAULT_JOB
+    link: str = DEFAULT_LINK
+    hold: bool = False               # job held busy through the latency
+    duration: Optional[float] = None  # precomputed work+latency (hold flows)
+
+
+@dataclass(frozen=True)
+class FlowResult:
+    op_id: int
+    job: str
+    start: float                     # admission (wire begins)
+    wire_end: float                  # link released
+    end: float                       # wire + latency complete
+    contended: bool                  # wire phase ever shared its link
+
+    @property
+    def occupancy(self) -> float:
+        """Time this flow kept its serialization resource busy."""
+        return self.end - self.start
+
+
+class _Run:
+    __slots__ = ("flow", "start", "remaining", "contended")
+
+    def __init__(self, flow: FlowSpec, start: float):
+        self.flow = flow
+        self.start = start
+        self.remaining = flow.work
+        self.contended = False
+
+
+class NetworkEngine:
+    """Event-queue executor for a set of flows over shared links.
+
+    ``capacities`` maps link name -> number of flows that can run at full
+    rate before fair sharing kicks in (default 1.0 — the whole link).
+    """
+
+    def __init__(self, capacities: Optional[Dict[str, float]] = None):
+        self.capacities = dict(capacities or {})
+
+    def _share(self, link: str, n_active: int) -> float:
+        cap = self.capacities.get(link, 1.0)
+        return min(1.0, cap / n_active) if n_active else 1.0
+
+    def run(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
+        """Execute ``flows``; returns results in input order."""
+        pending: Dict[str, List[FlowSpec]] = {}
+        for f in flows:
+            pending.setdefault(f.job, []).append(f)
+        for q in pending.values():
+            # stable service order: (priority, op_id); ready gates admission
+            q.sort(key=lambda f: (f.priority, f.op_id), reverse=True)
+
+        job_free: Dict[str, float] = {j: 0.0 for j in pending}
+        running: Dict[str, _Run] = {}          # job -> active wire
+        on_link: Dict[str, List[_Run]] = {}
+        results: Dict[int, FlowResult] = {}
+        t = 0.0
+        n_total = len(flows)
+        max_iters = 10 * n_total + 100
+
+        def _pick(job: str) -> Optional[FlowSpec]:
+            """Highest-priority flow of ``job`` that is ready at ``t``."""
+            q = pending[job]
+            best_i = -1
+            for i in range(len(q) - 1, -1, -1):  # sorted reverse: best last
+                if q[i].ready <= t:
+                    best_i = i
+                    break
+            if best_i < 0:
+                return None
+            return q.pop(best_i)
+
+        iters = 0
+        while len(results) < n_total:
+            iters += 1
+            if iters > max_iters:
+                raise RuntimeError("event engine failed to converge "
+                                   f"({len(results)}/{n_total} flows done)")
+
+            # -- admissions at the current time ------------------------------
+            admitted = False
+            for job in pending:
+                if job in running or job_free[job] > t or not pending[job]:
+                    continue
+                flow = _pick(job)
+                if flow is None:
+                    continue
+                run = _Run(flow, start=t)
+                active = on_link.setdefault(flow.link, [])
+                if active:
+                    run.contended = True
+                    for other in active:
+                        other.contended = True
+                if self._share(flow.link, 1) < 1.0:
+                    # a link with fractional capacity never runs a flow at
+                    # full rate, so the closed-form completion is invalid
+                    run.contended = True
+                active.append(run)
+                running[job] = run
+                admitted = True
+            if admitted:
+                continue  # shares changed; recompute projections
+
+            # -- next event: a wire completion or a job becoming serviceable -
+            t_next = None
+            for run in running.values():
+                share = self._share(run.flow.link, len(on_link[run.flow.link]))
+                proj = t + run.remaining / share
+                if t_next is None or proj < t_next:
+                    t_next = proj
+            for job, q in pending.items():
+                if job in running or not q:
+                    continue
+                earliest = min(f.ready for f in q)
+                trigger = max(job_free[job], earliest)
+                if t_next is None or trigger < t_next:
+                    t_next = trigger
+            if t_next is None:
+                raise RuntimeError("event engine stalled with pending flows")
+            t_next = max(t_next, t)
+
+            # -- advance all running wires to t_next -------------------------
+            dt = t_next - t
+            done: List[Tuple[str, _Run]] = []
+            for job, run in running.items():
+                share = self._share(run.flow.link, len(on_link[run.flow.link]))
+                run.remaining -= dt * share
+                # done when the residual is negligible — or too small to
+                # advance the clock at all (absorbed below ulp(t_next)),
+                # which would otherwise stall the loop
+                if (run.remaining <= run.flow.work * 1e-12 + 1e-18
+                        or t_next + run.remaining / share <= t_next):
+                    done.append((job, run))
+            t = t_next
+
+            for job, run in done:
+                flow = run.flow
+                if not run.contended:
+                    # exact closed form: share was 1.0 throughout
+                    wire_end = run.start + flow.work
+                    if flow.hold and flow.duration is not None:
+                        end = run.start + flow.duration
+                    else:
+                        end = wire_end + flow.latency
+                else:
+                    wire_end = t
+                    end = wire_end + flow.latency
+                results[flow.op_id] = FlowResult(
+                    flow.op_id, job, run.start, wire_end, end, run.contended)
+                on_link[flow.link].remove(run)
+                del running[job]
+                job_free[job] = end if flow.hold else wire_end
+
+        return [results[f.op_id] for f in flows]
+
+
+def run_flows(flows: Sequence[FlowSpec],
+              capacities: Optional[Dict[str, float]] = None
+              ) -> List[FlowResult]:
+    """Convenience wrapper: execute ``flows`` on a fresh engine."""
+    return NetworkEngine(capacities).run(flows)

@@ -47,6 +47,15 @@ class RingAllReduce:
             red /= self.compression_ratio
         return t + red
 
+    def wire_time(self, size: int) -> float:
+        """Transmission share of :meth:`time` — scales under link sharing."""
+        return ring_transmission_time(size, self.n, self.bw) / self.compression_ratio
+
+    def wire_bytes(self, size: int) -> float:
+        """Bytes each worker actually moves on its NIC for one all-reduce."""
+        return (ring_transmission_time(size, self.n, 1.0)
+                / max(self.compression_ratio, 1e-9))
+
 
 @dataclass(frozen=True)
 class HierarchicalAllReduce:
@@ -78,6 +87,32 @@ class HierarchicalAllReduce:
             t += (np_ - 1) * self.addest(shard / np_)
         return t
 
+    def wire_time(self, size: int) -> float:
+        nd, np_ = self.n_pod_devices, self.n_pods
+        t = 0.0
+        if nd > 1:
+            t += 2.0 * size * (nd - 1) / nd / self.ici_bw
+        if np_ > 1:
+            shard = size / max(nd, 1)
+            t += (2.0 * shard * (np_ - 1) / np_ / self.dcn_bw) / self.compression_ratio
+        return t
+
+    def wire_bytes(self, size: int) -> float:
+        """Bytes on the *ICI* link (the bandwidth under study); the DCN stage
+        moves the 1/nd shard and is reported via :meth:`wire_bytes_dcn`."""
+        nd, np_ = self.n_pod_devices, self.n_pods
+        if nd > 1:
+            return 2.0 * size * (nd - 1) / nd
+        return self.wire_bytes_dcn(size)
+
+    def wire_bytes_dcn(self, size: int) -> float:
+        nd, np_ = self.n_pod_devices, self.n_pods
+        if np_ <= 1:
+            return 0.0
+        shard = size / max(nd, 1)
+        return (2.0 * shard * (np_ - 1) / np_
+                / max(self.compression_ratio, 1e-9))
+
 
 @dataclass(frozen=True)
 class SwitchMLAllReduce:
@@ -99,6 +134,16 @@ class SwitchMLAllReduce:
         if self.n <= 1:
             return 0.0
         return (size / self.bw) / self.compression_ratio
+
+    def wire_time(self, size: int) -> float:
+        return self.time(size)        # all wire, no worker-side adds
+
+    def wire_bytes(self, size: int) -> float:
+        """In-network aggregation streams ~S per worker (full duplex),
+        independent of N — the point of SwitchML."""
+        if self.n <= 1:
+            return 0.0
+        return float(size) / max(self.compression_ratio, 1e-9)
 
 
 @dataclass(frozen=True)
@@ -123,6 +168,17 @@ class TwoTierParamServer:
             return 0.0
         wire = (2.0 * size * (self.n - 1) / self.n / self.bw)
         return wire / self.compression_ratio + self.addest(size / self.n) * (self.n - 1)
+
+    def wire_time(self, size: int) -> float:
+        if self.n <= 1:
+            return 0.0
+        return (2.0 * size * (self.n - 1) / self.n / self.bw) / self.compression_ratio
+
+    def wire_bytes(self, size: int) -> float:
+        if self.n <= 1:
+            return 0.0
+        return (2.0 * size * (self.n - 1) / self.n
+                / max(self.compression_ratio, 1e-9))
 
 
 def make_cost_model(n: int, bw: float, addest: AddEst, *,

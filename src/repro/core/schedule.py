@@ -1,0 +1,191 @@
+"""Comm-schedule IR: buckets -> collective ops, shared by simulator & runtime.
+
+The paper's claim is that *scheduling* — not link capacity — is what keeps
+distributed training from scaling.  This module makes the schedule a
+first-class object: a :class:`CommPlan` is an ordered set of
+:class:`CommOp` (bucket -> collective op with priority, chunking and
+channel), produced by a registered *scheduler* from the same bucket
+description the runtime's ``BucketPlan`` and the simulator's
+``fuse_buckets`` both emit.  The analytic layer lowers a plan onto the
+discrete-event engine (:mod:`repro.core.events`); the runtime executes its
+collectives in the plan's bucket order — so the simulator predicts exactly
+what the runtime does.
+
+Schedulers:
+
+- ``fifo``               one op per bucket, served in flush order with the
+                         reduction serialized behind the wire (Horovod's
+                         one-collective-in-flight semantics — the paper's
+                         measured baseline, bit-exact with the legacy loop);
+- ``priority``           ByteScheduler-style: k chunks per bucket, buckets
+                         flushed *later* (the model's front layers — backward
+                         runs last-layer-first) preempt at chunk boundaries,
+                         reductions overlap the next chunk's transmission;
+- ``chunked``            (alias ``chunked-pipelined``) k chunks per bucket in
+                         flush order, transmission pipelined with reduction
+                         — Sun et al.'s fused+pipelined all-reduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence, Tuple
+
+from repro.core.events import FlowSpec
+
+DEFAULT_CHUNKS = 4
+
+
+@dataclass(frozen=True)
+class CommOp:
+    """One collective (or one chunk of one) over a bucket's bytes."""
+
+    op_id: int
+    bucket_id: int
+    chunk: int                      # chunk index within the bucket
+    n_chunks: int                   # total chunks of this bucket
+    size: float                     # bytes moved by this op
+    n_tensors: int                  # tensors whose negotiation cost this op carries
+    ready: float                    # earliest start (the bucket's flush time)
+    priority: float                 # smaller = served first
+    channel: int = 0                # link id (multi-job / multi-rail)
+
+
+@dataclass(frozen=True)
+class CommPlan:
+    """An executable communication schedule for one sync."""
+
+    scheduler: str
+    ops: Tuple[CommOp, ...]
+    n_buckets: int
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(op.size for op in self.ops))
+
+    def bucket_order(self) -> Tuple[int, ...]:
+        """Bucket ids in first-service order — the runtime execution order."""
+        order: List[int] = []
+        for op in sorted(self.ops, key=lambda o: (o.priority, o.op_id)):
+            if op.bucket_id not in order:
+                order.append(op.bucket_id)
+        return tuple(order)
+
+
+# ---------------------------------------------------------------------------
+# schedulers: (ready, size, n_tensors) buckets -> CommPlan
+# ---------------------------------------------------------------------------
+
+BucketLike = Tuple[float, float, int]        # (ready_time, bytes, n_tensors)
+
+SchedulerFn = Callable[[Sequence[BucketLike], int, int], CommPlan]
+
+SCHEDULERS: Dict[str, SchedulerFn] = {}
+
+_ALIASES = {"chunked-pipelined": "chunked", "bytescheduler": "priority"}
+
+
+def canonical_scheduler(name: str) -> str:
+    name = _ALIASES.get(name, name)
+    if name not in SCHEDULERS:
+        known = sorted(SCHEDULERS) + sorted(_ALIASES)
+        raise KeyError(f"unknown scheduler {name!r}; known: {', '.join(known)}")
+    return name
+
+
+def _register(name: str):
+    def deco(fn: SchedulerFn) -> SchedulerFn:
+        SCHEDULERS[name] = fn
+        return fn
+    return deco
+
+
+def _chunk(ops: List[CommOp], bucket_id: int, ready: float, size: float,
+           n_tensors: int, n_chunks: int, priority_of: Callable[[int, int], float],
+           channel: int) -> None:
+    """Append ``n_chunks`` equal chunks of one bucket (bytes conserved).
+
+    The per-tensor negotiation cost is paid once per bucket, on its first
+    chunk (Horovod negotiates per fused tensor, not per wire chunk).
+    """
+    k = max(1, min(int(n_chunks), max(int(size), 1)))
+    base = size / k
+    for c in range(k):
+        chunk_size = size - base * (k - 1) if c == k - 1 else base
+        ops.append(CommOp(
+            op_id=len(ops), bucket_id=bucket_id, chunk=c, n_chunks=k,
+            size=chunk_size, n_tensors=n_tensors if c == 0 else 0,
+            ready=ready, priority=priority_of(bucket_id, c), channel=channel))
+
+
+@_register("fifo")
+def _sched_fifo(buckets: Sequence[BucketLike], n_chunks: int,
+                channel: int = 0) -> CommPlan:
+    """Today's Horovod semantics: flush order, no chunking."""
+    ops = [CommOp(op_id=i, bucket_id=i, chunk=0, n_chunks=1, size=size,
+                  n_tensors=n_tensors, ready=ready, priority=float(i),
+                  channel=channel)
+           for i, (ready, size, n_tensors) in enumerate(buckets)]
+    return CommPlan("fifo", tuple(ops), n_buckets=len(ops))
+
+
+@_register("chunked")
+def _sched_chunked(buckets: Sequence[BucketLike], n_chunks: int,
+                   channel: int = 0) -> CommPlan:
+    """Flush order at chunk granularity; reduction overlaps transmission."""
+    ops: List[CommOp] = []
+    for i, (ready, size, n_tensors) in enumerate(buckets):
+        _chunk(ops, i, ready, size, n_tensors, n_chunks,
+               lambda b, c: float(b), channel)
+    return CommPlan("chunked", tuple(ops), n_buckets=len(buckets))
+
+
+@_register("priority")
+def _sched_priority(buckets: Sequence[BucketLike], n_chunks: int,
+                    channel: int = 0) -> CommPlan:
+    """First-layer-first (ByteScheduler): backward emits the *last* layers
+    first, so later-flushed buckets hold the front of the model and preempt
+    earlier ones at chunk boundaries."""
+    ops: List[CommOp] = []
+    n = len(buckets)
+    for i, (ready, size, n_tensors) in enumerate(buckets):
+        _chunk(ops, i, ready, size, n_tensors, n_chunks,
+               lambda b, c: float(n - 1 - b), channel)
+    return CommPlan("priority", tuple(ops), n_buckets=len(buckets))
+
+
+def lower_buckets(buckets: Sequence[BucketLike], *, scheduler: str = "fifo",
+                  n_chunks: int = DEFAULT_CHUNKS, channel: int = 0) -> CommPlan:
+    """Lower flushed buckets into a :class:`CommPlan` via a named scheduler."""
+    return SCHEDULERS[canonical_scheduler(scheduler)](buckets, n_chunks,
+                                                      channel)
+
+
+# ---------------------------------------------------------------------------
+# lowering a plan onto the event engine
+# ---------------------------------------------------------------------------
+
+def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
+                  job: str = "job0", link: str = "nic",
+                  op_id_base: int = 0) -> List[FlowSpec]:
+    """CommOps -> engine flows under a cost model.
+
+    ``cost`` is any all-reduce cost model from :mod:`repro.core.network_model`
+    — ``time(size)`` is the serialized duration; ``wire_time(size)`` (when
+    present) is the transmission share of it, the part that scales with link
+    contention.  The remainder (vector adds + per-tensor negotiation) is a
+    fixed latency.  ``fifo`` flows hold the job through the latency and
+    carry the legacy loop's exact duration expression, so an uncontended
+    fifo schedule is bit-identical with the pre-engine serialized loop.
+    """
+    hold = plan.scheduler == "fifo"
+    flows: List[FlowSpec] = []
+    for op in plan.ops:
+        total = cost.time(op.size) + per_tensor_overhead * op.n_tensors
+        wire = getattr(cost, "wire_time", cost.time)(op.size)
+        wire = min(wire, total)
+        flows.append(FlowSpec(
+            op_id=op_id_base + op.op_id, ready=op.ready, work=wire,
+            latency=max(0.0, total - wire), priority=op.priority,
+            job=job, link=f"{link}{op.channel}" if op.channel else link,
+            hold=hold, duration=total))
+    return flows

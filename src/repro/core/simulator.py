@@ -1,13 +1,25 @@
-"""The paper's §3.1 what-if simulator.
+"""The paper's §3.1 what-if simulator, on the discrete-event network engine.
 
 Two logical processes communicate through a queue:
 
 - the **backward process** replays the gradient-ready timeline and batches
   gradients into a Horovod-style fusion buffer (64 MB size limit OR 5 ms
   timeout from the first pending gradient, whichever fires first);
-- the **all-reduce process** serves flushed buckets FIFO and serialized,
-  each costing transmission + reduction per the plugged-in cost model
-  (ring reduce-scatter/all-gather by default; hierarchical TPU optional).
+- the **communication process** lowers the flushed buckets into a
+  :class:`~repro.core.schedule.CommPlan` under a named scheduler and
+  executes it on the event engine (:mod:`repro.core.events`):
+
+  * ``fifo``      — FIFO, one serialized collective in flight (Horovod's
+                    semantics; bit-exact with the legacy serialized loop);
+  * ``priority``  — first-layer-first with preemption at chunk boundaries
+                    (ByteScheduler-style);
+  * ``chunked``   — k chunks per bucket, transmission pipelined with
+                    reduction (Sun et al.'s fused+pipelined all-reduce).
+
+The ``topology``/``transport`` cost models become per-flow durations (a
+wire part that scales under link sharing plus a fixed reduction latency),
+so multi-job contention — two timelines on one link — is expressible via
+:func:`simulate_contention`.
 
 Outputs: t_sync, t_overhead = max(0, t_sync - t_back), and
 f_sim = t_batch / (t_batch + t_overhead)   (paper Eq. in §3.1).
@@ -15,12 +27,14 @@ f_sim = t_batch / (t_batch + t_overhead)   (paper Eq. in §3.1).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import CommConfig
 from repro.core.addest import AddEst
-from repro.core.network_model import (HierarchicalAllReduce, RingAllReduce,
-                                      ring_transmission_time)
+from repro.core.events import FlowResult, run_flows
+from repro.core.network_model import RingAllReduce, make_cost_model
+from repro.core.schedule import (CommPlan, canonical_scheduler,
+                                 lower_buckets, plan_to_flows)
 from repro.core.timeline import GradTimeline
 from repro.core.transport import Transport, get_transport
 
@@ -38,7 +52,7 @@ class Bucket:
     flush_time: float        # when the backward process hands it over
     size: float              # bytes
     n_tensors: int = 1       # gradient tensors fused into this bucket
-    start: float = 0.0       # all-reduce start (filled by the server loop)
+    start: float = 0.0       # all-reduce start (filled by the engine)
     end: float = 0.0
 
     def to_dict(self) -> dict:
@@ -63,10 +77,12 @@ class SimResult:
     buckets: Tuple[Bucket, ...]
     wire_bytes_per_worker: float      # actual bytes each worker moved
     network_utilization: float        # avg wire throughput / physical bw
+    scheduler: str = "fifo"           # comm schedule the result was run under
 
     def summary(self) -> str:
         return (f"{self.name}: n={self.n_workers} bw={self.bandwidth*8/1e9:.0f}Gbps "
-                f"f_sim={self.scaling_factor:.3f} overhead={self.t_overhead*1e3:.1f}ms "
+                f"sched={self.scheduler} f_sim={self.scaling_factor:.3f} "
+                f"overhead={self.t_overhead*1e3:.1f}ms "
                 f"util={self.network_utilization:.2f}")
 
     def to_dict(self, include_buckets: bool = False) -> dict:
@@ -76,6 +92,7 @@ class SimResult:
         float repr round-trips through JSON bit-exactly either way.
         """
         d = {f: getattr(self, f) for f in RESULT_FIELDS}
+        d["scheduler"] = self.scheduler
         d["n_buckets"] = len(self.buckets)
         if include_buckets:
             d["buckets"] = [b.to_dict() for b in self.buckets]
@@ -84,7 +101,8 @@ class SimResult:
     @staticmethod
     def from_dict(d: dict) -> "SimResult":
         buckets = tuple(Bucket.from_dict(b) for b in d.get("buckets", ()))
-        return SimResult(**{f: d[f] for f in RESULT_FIELDS}, buckets=buckets)
+        return SimResult(**{f: d[f] for f in RESULT_FIELDS}, buckets=buckets,
+                         scheduler=d.get("scheduler", "fifo"))
 
 
 def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
@@ -95,6 +113,12 @@ def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
     elapsed since its first pending gradient.  The tail bucket flushes when
     the last gradient arrives (backward completion ends the cycle — Horovod
     does not idle out the final timeout window).
+
+    A gradient larger than the buffer flushes in ``limit``-sized slabs; the
+    split tensor stays pending in the remainder bucket and is counted there
+    (``n_pend = 1``), so per-tensor negotiation overhead is charged once per
+    bucket the tensor occupies rather than undercounting every flush after
+    a slab split.
     """
     limit = comm.fusion_buffer_mb * 1024 * 1024
     timeout = comm.timeout_ms / 1e3
@@ -114,11 +138,35 @@ def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
             # a gradient larger than the buffer flushes in `limit` slabs
             buckets.append(Bucket(t, min(pending, limit), max(n_pend, 1)))
             pending -= min(pending, limit)
-            n_pend = 0
+            n_pend = 0 if pending == 0.0 else 1   # the split tensor's tail
             first_t = None if pending == 0.0 else t
     if pending > 0.0 and first_t is not None:
         buckets.append(Bucket(timeline.t_back, pending, n_pend))
     return buckets
+
+
+def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
+                tr: Transport, *, job: str = "job0",
+                results: Optional[Sequence[FlowResult]] = None
+                ) -> Tuple[List[Bucket], float, float]:
+    """Map per-op flow results back to per-bucket (start, end) + busy time."""
+    if results is None:
+        results = run_flows(plan_to_flows(plan, cost, tr.per_tensor_overhead,
+                                          job=job))
+    start = {b: None for b in range(plan.n_buckets)}
+    end = {b: 0.0 for b in range(plan.n_buckets)}
+    busy = 0.0
+    for op, r in zip(plan.ops, results):
+        b = op.bucket_id
+        start[b] = r.start if start[b] is None else min(start[b], r.start)
+        end[b] = max(end[b], r.end)
+        busy += r.occupancy if plan.scheduler == "fifo" else r.wire_end - r.start
+    served = [Bucket(b.flush_time, b.size, b.n_tensors,
+                     start[i] if start[i] is not None else b.flush_time,
+                     end[i])
+              for i, b in enumerate(buckets)]
+    t_sync = max((b.end for b in served), default=0.0)
+    return served, t_sync, busy
 
 
 def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
@@ -127,50 +175,43 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
              addest: Optional[AddEst] = None,
              compression_ratio: float = 1.0,
              topology: str = "ring", n_pods: int = 1,
-             dcn_bandwidth: Optional[float] = None) -> SimResult:
+             dcn_bandwidth: Optional[float] = None,
+             scheduler: Optional[str] = None,
+             n_chunks: Optional[int] = None) -> SimResult:
     """Run the two-process simulation for one iteration.
 
     ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
-    bandwidth (the paper's measured-vs-ideal axis).
+    bandwidth (the paper's measured-vs-ideal axis).  ``scheduler`` selects
+    the comm schedule (default: ``comm.scheduler``, i.e. ``fifo``);
+    ``n_chunks`` the chunking granularity of the pipelined schedulers.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
     tr = get_transport(transport) if isinstance(transport, str) else transport
     eff_bw = tr.effective(bandwidth)
+    sched = canonical_scheduler(scheduler or comm.scheduler)
+    k = n_chunks if n_chunks is not None else comm.sched_chunks
 
-    if topology == "hierarchical":
-        cost = HierarchicalAllReduce(
-            n_pod_devices=n_workers // n_pods, n_pods=n_pods,
-            ici_bw=eff_bw, dcn_bw=tr.effective(dcn_bandwidth or bandwidth / 2),
-            addest=addest, compression_ratio=compression_ratio)
-    elif topology == "ring":
-        cost = RingAllReduce(n_workers, eff_bw, addest, compression_ratio)
-    else:
-        from repro.core.network_model import make_cost_model
-        cost = make_cost_model(n_workers, eff_bw, addest, topology=topology,
-                               compression_ratio=compression_ratio)
+    cost = make_cost_model(n_workers, eff_bw, addest, topology=topology,
+                           n_pods=n_pods,
+                           dcn_bw=tr.effective(dcn_bandwidth or bandwidth / 2),
+                           compression_ratio=compression_ratio)
 
     buckets = fuse_buckets(timeline, comm)
+    plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
+                          for b in buckets], scheduler=sched, n_chunks=k)
+    served, t_sync, busy = _serve_plan(plan, buckets, cost, tr)
 
-    # the all-reduce process: FIFO, one collective in flight at a time
-    served: List[Bucket] = []
-    prev_end = 0.0
-    busy = 0.0
-    for b in buckets:
-        start = max(b.flush_time, prev_end)
-        dur = cost.time(b.size) + tr.per_tensor_overhead * b.n_tensors
-        prev_end = start + dur
-        busy += dur
-        served.append(Bucket(b.flush_time, b.size, b.n_tensors, start, prev_end))
-
-    t_sync = served[-1].end if served else timeline.t_back
+    if not served:
+        t_sync = timeline.t_back
     t_overhead = max(0.0, t_sync - timeline.t_back)
     f_sim = timeline.t_batch / (timeline.t_batch + t_overhead)
 
-    wire = sum(ring_transmission_time(b.size, n_workers, 1.0)  # bytes at bw=1
-               for b in served) / max(compression_ratio, 1e-9)
-    # utilization while the all-reduce process is busy (paper Fig. 4 measures
-    # real-time NIC throughput during the communication phase)
+    # wire bytes from the active cost model (SwitchML moves ~S per worker,
+    # hierarchical counts the ICI stage, ring the 2S(N-1)/N ring traffic)
+    wire = sum(cost.wire_bytes(b.size) for b in served)
+    # utilization while the communication process occupies the link (paper
+    # Fig. 4 measures real-time NIC throughput during the comm phase)
     util = (wire / busy) / bandwidth if busy > 0 else 0.0
 
     return SimResult(
@@ -178,4 +219,62 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
         effective_bw=eff_bw, t_batch=timeline.t_batch, t_back=timeline.t_back,
         t_sync=t_sync, t_overhead=t_overhead, scaling_factor=f_sim,
         buckets=tuple(served), wire_bytes_per_worker=wire,
-        network_utilization=min(util, 1.0))
+        network_utilization=min(util, 1.0), scheduler=sched)
+
+
+def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
+                        bandwidth: float, comm: Optional[CommConfig] = None,
+                        transport: str | Transport = "ideal",
+                        addest: Optional[AddEst] = None,
+                        compression_ratio: float = 1.0,
+                        scheduler: Optional[str] = None,
+                        n_chunks: Optional[int] = None) -> List[SimResult]:
+    """Multiple jobs sharing one physical link (fair-share contention).
+
+    Each timeline is an independent training job running the same ring
+    collective over the *same* link: concurrent flows split the effective
+    bandwidth evenly (progressive filling).  Returns one
+    :class:`SimResult` per job; with a single timeline this degenerates to
+    :func:`simulate` (ring topology).
+    """
+    comm = comm or CommConfig()
+    addest = addest or AddEst.v100()
+    tr = get_transport(transport) if isinstance(transport, str) else transport
+    eff_bw = tr.effective(bandwidth)
+    sched = canonical_scheduler(scheduler or comm.scheduler)
+    k = n_chunks if n_chunks is not None else comm.sched_chunks
+    cost = RingAllReduce(n_workers, eff_bw, addest, compression_ratio)
+
+    jobs = []
+    all_flows = []
+    base = 0
+    for j, tl in enumerate(timelines):
+        buckets = fuse_buckets(tl, comm)
+        plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
+                              for b in buckets], scheduler=sched, n_chunks=k)
+        flows = plan_to_flows(plan, cost, tr.per_tensor_overhead,
+                              job=f"job{j}", op_id_base=base)
+        base += len(flows)
+        jobs.append((tl, buckets, plan, len(flows)))
+        all_flows.extend(flows)
+
+    results = run_flows(all_flows)
+    out: List[SimResult] = []
+    pos = 0
+    for j, (tl, buckets, plan, n_flows) in enumerate(jobs):
+        served, t_sync, busy = _serve_plan(plan, buckets, cost, tr,
+                                           results=results[pos:pos + n_flows])
+        pos += n_flows
+        if not served:
+            t_sync = tl.t_back
+        t_overhead = max(0.0, t_sync - tl.t_back)
+        wire = sum(cost.wire_bytes(b.size) for b in served)
+        util = (wire / busy) / bandwidth if busy > 0 else 0.0
+        out.append(SimResult(
+            name=tl.name, n_workers=n_workers, bandwidth=bandwidth,
+            effective_bw=eff_bw, t_batch=tl.t_batch, t_back=tl.t_back,
+            t_sync=t_sync, t_overhead=t_overhead,
+            scaling_factor=tl.t_batch / (tl.t_batch + t_overhead),
+            buckets=tuple(served), wire_bytes_per_worker=wire,
+            network_utilization=min(util, 1.0), scheduler=sched))
+    return out

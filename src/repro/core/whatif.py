@@ -74,7 +74,7 @@ def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     bw = spec.bandwidth_gbps[0]
     return [dict(model=m, servers=n,
-                 scaling=ix[(m, n, bw, "horovod_tcp", 1.0, "ring")]
+                 scaling=ix[(m, n, bw, "horovod_tcp", 1.0, "ring", "fifo")]
                  ["scaling_factor"])
             for m in spec.models for n in spec.n_servers]
 
@@ -92,7 +92,7 @@ def fig3_scaling_vs_bandwidth(model: Optional[str] = None,
     ix = _cells(spec)
     tr = spec.transport[0]
     return [dict(model=spec.models[0], servers=n, bandwidth_gbps=bw,
-                 scaling=ix[(spec.models[0], n, bw, tr, 1.0, "ring")]
+                 scaling=ix[(spec.models[0], n, bw, tr, 1.0, "ring", "fifo")]
                  ["scaling_factor"])
             for n in spec.n_servers for bw in spec.bandwidth_gbps]
 
@@ -108,9 +108,9 @@ def fig4_utilization(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     n, tr = spec.n_servers[0], spec.transport[0]
     return [dict(model=m, bandwidth_gbps=bw,
-                 utilization=ix[(m, n, bw, tr, 1.0, "ring")]
+                 utilization=ix[(m, n, bw, tr, 1.0, "ring", "fifo")]
                  ["network_utilization"],
-                 effective_gbps=ix[(m, n, bw, tr, 1.0, "ring")]
+                 effective_gbps=ix[(m, n, bw, tr, 1.0, "ring", "fifo")]
                  ["effective_gbps"])
             for m in spec.models for bw in spec.bandwidth_gbps]
 
@@ -128,9 +128,9 @@ def fig6_sim_vs_measured(models: Optional[Sequence[str]] = None,
     n = spec.n_servers[0]
     return [dict(model=m, bandwidth_gbps=bw,
                  simulated_full_util=ix[(m, n, bw, "ideal",
-                                         1.0, "ring")]["scaling_factor"],
+                                         1.0, "ring", "fifo")]["scaling_factor"],
                  measured_mode=ix[(m, n, bw, "horovod_tcp",
-                                   1.0, "ring")]["scaling_factor"])
+                                   1.0, "ring", "fifo")]["scaling_factor"])
             for m in spec.models for bw in spec.bandwidth_gbps]
 
 
@@ -145,9 +145,9 @@ def fig7_scaling_vs_workers(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     bw = spec.bandwidth_gbps[0]
     return [dict(model=m, servers=n, gpus=n * GPUS_PER_SERVER,
-                 simulated=ix[(m, n, bw, "ideal", 1.0, "ring")]
+                 simulated=ix[(m, n, bw, "ideal", 1.0, "ring", "fifo")]
                  ["scaling_factor"],
-                 measured_mode=ix[(m, n, bw, "horovod_tcp", 1.0, "ring")]
+                 measured_mode=ix[(m, n, bw, "horovod_tcp", 1.0, "ring", "fifo")]
                  ["scaling_factor"])
             for m in spec.models for n in spec.n_servers]
 
@@ -167,7 +167,7 @@ def fig8_compression(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     n = spec.n_servers[0]
     return [dict(model=m, bandwidth_gbps=bw, ratio=r,
-                 scaling=ix[(m, n, bw, "ideal", r, "ring")]["scaling_factor"])
+                 scaling=ix[(m, n, bw, "ideal", r, "ring", "fifo")]["scaling_factor"])
             for m in spec.models for bw in spec.bandwidth_gbps
             for r in spec.compression_ratio]
 
@@ -203,9 +203,63 @@ def fig9_other_systems(models: Optional[Sequence[str]] = None,
         for bw in spec.bandwidth_gbps:
             row = dict(model=m, bandwidth_gbps=bw)
             for topo in spec.topology:
-                row[topo] = ix[(m, n, bw, "ideal", 1.0, topo)
+                row[topo] = ix[(m, n, bw, "ideal", 1.0, topo, "fifo")
                                ]["scaling_factor"]
             out.append(row)
+    return out
+
+
+def fig10_schedulers(models: Optional[Sequence[str]] = None,
+                     bws: Optional[Sequence[float]] = None,
+                     schedulers: Optional[Sequence[str]] = None,
+                     transport: Optional[str] = None) -> List[Dict]:
+    """The scheduling what-if the event engine opens: f_sim vs bandwidth per
+    comm scheduler (fifo = Horovod baseline, priority = ByteScheduler-style,
+    chunked = pipelined transmission+reduction).  Rows come from the
+    registered ``scheduler-suite`` grid, the same sweep the
+    ``scheduler_suite`` golden artifact gates in CI."""
+    spec = _grid("scheduler-suite",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if schedulers is None
+                    else dict(scheduler=tuple(schedulers))),
+                 **({} if transport is None else dict(transport=(transport,))))
+    ix = _cells(spec)
+    n = spec.n_servers[0]
+    out = []
+    for m in spec.models:
+        for tr in spec.transport:
+            for bw in spec.bandwidth_gbps:
+                row = dict(model=m, transport=tr, bandwidth_gbps=bw)
+                for s in spec.scheduler:
+                    c = ix[(m, n, bw, tr, 1.0, "ring", s)]
+                    row[s] = c["scaling_factor"]
+                    row[f"{s}_overhead_ms"] = c["t_overhead"] * 1e3
+                out.append(row)
+    return out
+
+
+def contention_whatif(models: Sequence[str] = ("resnet50", "vgg16"),
+                      bandwidth_gbps: float = 25.0, n_servers: int = 8,
+                      scheduler: str = "fifo") -> List[Dict]:
+    """Two training jobs sharing one link — the multi-tenant scenario the
+    event engine's fair-share links make expressible.  Each job's scaling
+    factor under contention vs running the link alone."""
+    from repro.core.simulator import simulate_contention
+    n = n_servers * GPUS_PER_SERVER
+    bw = bandwidth_gbps * GBPS
+    tls = [paper_timeline(m) for m in models]
+    shared = simulate_contention(tls, n_workers=n, bandwidth=bw,
+                                 scheduler=scheduler)
+    out = []
+    for tl, r in zip(tls, shared):
+        alone = simulate(tl, n_workers=n, bandwidth=bw, scheduler=scheduler)
+        out.append(dict(model=tl.name, bandwidth_gbps=bandwidth_gbps,
+                        scheduler=scheduler, alone=alone.scaling_factor,
+                        contended=r.scaling_factor,
+                        slowdown=alone.scaling_factor / max(r.scaling_factor,
+                                                            1e-12)))
     return out
 
 

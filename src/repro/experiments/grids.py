@@ -61,10 +61,22 @@ _register(ExperimentSpec(
     bandwidth_gbps=(10.0, 25.0, 100.0), transport=("ideal",),
     topology=("ring", "switchml", "param_server")))
 
+# Scheduler axis (tentpole of the event-engine refactor): the paper grid's
+# interesting bandwidths under each comm schedule.  fifo is the measured
+# Horovod baseline; priority (ByteScheduler-style first-layer-first) and
+# chunked (pipelined transmission+reduction) must never add overhead —
+# the `scheduler_suite` golden artifact gates exactly that in CI.
+_register(ExperimentSpec(
+    name="scheduler-suite", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(5.0, 10.0, 25.0, 100.0),
+    transport=("ideal", "horovod_tcp"),
+    scheduler=("fifo", "priority", "chunked")))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
               "paper-fig7", "paper-fig8", "paper-fig9"),
+    "scheduler": ("scheduler-suite",),
 }
 
 

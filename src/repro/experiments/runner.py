@@ -41,6 +41,8 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
         transport=cell.transport,
         compression_ratio=cell.compression_ratio,
         topology=cell.topology,
+        scheduler=cell.scheduler,
+        n_chunks=spec.sched_chunks,
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())
@@ -95,6 +97,10 @@ def run_suite(specs: Sequence[ExperimentSpec], *, executor: str = "thread",
 
 
 def index_cells(cells: Sequence[Dict]) -> Dict[tuple, Dict]:
-    """Cell list -> {(model, n_servers, bw, transport, ratio, topo): cell}."""
-    from repro.experiments.spec import CELL_AXES
-    return {tuple(c[a] for a in CELL_AXES): c for c in cells}
+    """Cell list -> {(model, n_servers, bw, transport, ratio, topo,
+    scheduler): cell}.  Axes added after an artifact was written fall back
+    to their recorded defaults, so old artifacts index consistently."""
+    from repro.experiments.spec import AXIS_DEFAULTS, CELL_AXES
+    return {tuple(c.get(a, AXIS_DEFAULTS[a]) if a in AXIS_DEFAULTS else c[a]
+                  for a in CELL_AXES): c
+            for c in cells}

@@ -17,9 +17,13 @@ from typing import Dict, Sequence, Tuple
 
 SPEC_VERSION = 1
 
-# axis order is part of the stable cell identity — never reorder
+# axis order is part of the stable cell identity — never reorder (new axes
+# append at the end, with a default recorded in AXIS_DEFAULTS so artifacts
+# written before the axis existed still index consistently)
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
-             "compression_ratio", "topology")
+             "compression_ratio", "topology", "scheduler")
+
+AXIS_DEFAULTS = {"scheduler": "fifo"}
 
 
 @dataclass(frozen=True)
@@ -32,6 +36,7 @@ class Cell:
     transport: str
     compression_ratio: float
     topology: str
+    scheduler: str = "fifo"
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
@@ -41,7 +46,8 @@ class Cell:
 
     @staticmethod
     def from_dict(d: Dict) -> "Cell":
-        return Cell(**{a: d[a] for a in CELL_AXES})
+        return Cell(**{a: d.get(a, AXIS_DEFAULTS[a]) if a in AXIS_DEFAULTS
+                       else d[a] for a in CELL_AXES})
 
 
 @dataclass(frozen=True)
@@ -60,15 +66,17 @@ class ExperimentSpec:
     transport: Tuple[str, ...] = ("ideal",)
     compression_ratio: Tuple[float, ...] = (1.0,)
     topology: Tuple[str, ...] = ("ring",)
+    scheduler: Tuple[str, ...] = ("fifo",)
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
     timeout_ms: float = 5.0             # paper's fusion timeout
+    sched_chunks: int = 4               # chunks/bucket for pipelined scheds
 
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
         for f in ("models", "n_servers", "bandwidth_gbps", "transport",
-                  "compression_ratio", "topology"):
+                  "compression_ratio", "topology", "scheduler"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -77,17 +85,18 @@ class ExperimentSpec:
 
     def expand(self) -> Tuple[Cell, ...]:
         """Cartesian product in stable axis order (model outermost)."""
-        return tuple(Cell(m, int(n), float(bw), t, float(r), topo)
-                     for m, n, bw, t, r, topo in product(
+        return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s)
+                     for m, n, bw, t, r, topo, s in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
-                         self.topology))
+                         self.topology, self.scheduler))
 
     @property
     def n_cells(self) -> int:
         return (len(self.models) * len(self.n_servers)
                 * len(self.bandwidth_gbps) * len(self.transport)
-                * len(self.compression_ratio) * len(self.topology))
+                * len(self.compression_ratio) * len(self.topology)
+                * len(self.scheduler))
 
     # -- serialization -------------------------------------------------------
 

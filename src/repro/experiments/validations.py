@@ -88,6 +88,29 @@ def _fig9(cells: Sequence[Dict]) -> Check:
     return {"switchml_never_worse": ok}
 
 
+def _scheduler_suite(cells: Sequence[Dict]) -> Check:
+    """The tentpole's acceptance claim: a better schedule never *adds*
+    overhead.  priority and chunked reorder/pipeline the same wire work a
+    work-conserving link serves, so per cell their t_overhead must be <=
+    fifo's (tiny epsilon for float re-association)."""
+    over = _by(cells, "model", "bandwidth_gbps", "transport", "scheduler",
+               value="t_overhead")
+    eps = 1e-12
+    pri_ok = all(over[(m, bw, t, "priority")] <= f + eps
+                 for (m, bw, t, s), f in over.items() if s == "fifo")
+    chk_ok = all(over[(m, bw, t, "chunked")] <= f + eps
+                 for (m, bw, t, s), f in over.items() if s == "fifo")
+    # pipelining matters most where the link is the bottleneck: at 5 Gbps
+    # measured-mode VGG16 the chunked schedule must show a real win
+    gain = (over[("vgg16", 5.0, "horovod_tcp", "fifo")]
+            - over[("vgg16", 5.0, "horovod_tcp", "chunked")])
+    return {
+        "priority_overhead_le_fifo": pri_ok,
+        "chunked_overhead_le_fifo": chk_ok,
+        "chunked_helps_vgg16_at_5g": gain > 0.0,
+    }
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -96,6 +119,7 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig7": _fig7,
     "paper-fig8": _fig8,
     "paper-fig9": _fig9,
+    "scheduler-suite": _scheduler_suite,
 }
 
 

@@ -61,23 +61,43 @@ class BucketPlan:
         self.dtypes = list(dtypes)
         self.assignments: List[Tuple[int, int]] = []      # (bucket, offset)
         self.bucket_sizes: List[int] = []
-        cur, cur_bytes = 0, 0
+        self.bucket_tensors: List[int] = []               # leaves per bucket
+        cur, cur_bytes, cur_tensors = 0, 0, 0
         offset = 0
         for size, dtype in zip(self.sizes, self.dtypes):
             nbytes = size * jnp.dtype(dtype).itemsize
             if cur_bytes > 0 and cur_bytes + nbytes > limit_bytes:
                 self.bucket_sizes.append(offset)
+                self.bucket_tensors.append(cur_tensors)
                 cur += 1
-                cur_bytes, offset = 0, 0
+                cur_bytes, offset, cur_tensors = 0, 0, 0
             self.assignments.append((cur, offset))
             offset += size
             cur_bytes += nbytes
+            cur_tensors += 1
         if offset:
             self.bucket_sizes.append(offset)
+            self.bucket_tensors.append(cur_tensors)
 
     @property
     def n_buckets(self) -> int:
         return len(self.bucket_sizes)
+
+    def comm_plan(self, comm: CommConfig):
+        """Lower this packing into the shared comm-schedule IR.
+
+        Buckets are packed (and flushed) in pytree order — the backward
+        production order — so the plan's ``bucket_order()`` is exactly what
+        the simulator predicts for the same scheduler: the runtime executes
+        its collectives in that order (simulator <-> runtime parity).
+        Packed buckets are f32, hence 4 bytes per element.
+        """
+        from repro.core.schedule import lower_buckets
+        return lower_buckets(
+            [(0.0, float(n_elems * 4), n_tensors)
+             for n_elems, n_tensors in zip(self.bucket_sizes,
+                                           self.bucket_tensors)],
+            scheduler=comm.scheduler, n_chunks=comm.sched_chunks)
 
 
 def make_plan(tree: Any, limit_mb: float) -> Tuple[BucketPlan, Any]:
@@ -200,11 +220,27 @@ def sync_grads(grads: Any, mesh: Mesh, comm: CommConfig,
     # model-parallel sharding stays outside (pjit handles those dims)
     spec = P()
 
+    # the comm-schedule IR orders the collectives: the same CommPlan the
+    # simulator executes, so the runtime issues its buckets in the order the
+    # analytic layer predicted (fifo keeps pack order; priority front-loads
+    # the model's first layers).  Emission order alone would let XLA's
+    # latency-hiding scheduler reorder independent collectives, so each
+    # bucket's input is barrier-chained to the previous bucket's output —
+    # one collective in flight, in plan order, matching the engine's
+    # serialization semantics.
+    order = plan.comm_plan(comm).bucket_order()
+
     @functools.partial(shard_map, mesh=mesh, in_specs=spec, out_specs=spec,
                        check_rep=False)
     def run(*flat_leaves):
         buckets = pack(plan, flat_leaves)
-        synced = [_sync_bucket(b, comm, axes, axis_sizes) for b in buckets]
+        synced: List[jnp.ndarray] = [None] * len(buckets)  # type: ignore[list-item]
+        prev = None
+        for b in order:
+            x = buckets[b]
+            if prev is not None:
+                x, _ = jax.lax.optimization_barrier((x, prev))
+            prev = synced[b] = _sync_bucket(x, comm, axes, axis_sizes)
         return tuple(unpack(plan, synced))
 
     new_leaves = run(*leaves)

@@ -1,0 +1,319 @@
+"""The comm-schedule IR and discrete-event engine: schedule invariants
+(property tests), bit-exact fifo equivalence with the pre-engine serialized
+loop, fair-share link semantics, multi-job contention, and the
+simulator <-> runtime plan parity."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import CommConfig
+from repro.core.addest import AddEst
+from repro.core.events import FlowSpec, run_flows
+from repro.core.network_model import RingAllReduce
+from repro.core.schedule import (SCHEDULERS, canonical_scheduler,
+                                 lower_buckets, plan_to_flows)
+from repro.core.simulator import (fuse_buckets, simulate, simulate_contention)
+from repro.core.timeline import GradTimeline, from_cnn
+from repro.core.transport import GBPS, get_transport
+
+
+def _mk_timeline(ready, sizes, t_back=None):
+    t_back = t_back if t_back is not None else (max(ready) if ready else 0.0)
+    return GradTimeline("t", tuple(ready), tuple(sizes), t_back, t_back * 1.5)
+
+
+def _random_timeline(n, seed, max_mb=120):
+    rng = np.random.default_rng(seed)
+    ready = np.sort(rng.uniform(0, 0.1, n))
+    sizes = rng.uniform(1e3, max_mb * 1e6, n)
+    return _mk_timeline(list(ready), list(sizes))
+
+
+def _legacy_serialized(timeline, n_workers, bandwidth, transport="ideal",
+                       compression_ratio=1.0, comm=None):
+    """The pre-refactor all-reduce loop, verbatim: FIFO, one serialized
+    collective in flight at a time.  The engine's fifo scheduler must
+    reproduce it bit-for-bit."""
+    comm = comm or CommConfig()
+    tr = get_transport(transport)
+    cost = RingAllReduce(n_workers, tr.effective(bandwidth), AddEst.v100(),
+                         compression_ratio)
+    served, prev_end = [], 0.0
+    for b in fuse_buckets(timeline, comm):
+        start = max(b.flush_time, prev_end)
+        dur = cost.time(b.size) + tr.per_tensor_overhead * b.n_tensors
+        prev_end = start + dur
+        served.append((start, prev_end))
+    return served
+
+
+# ---------------------------------------------------------------------------
+# event engine semantics
+# ---------------------------------------------------------------------------
+
+def test_single_flow_closed_form():
+    (r,) = run_flows([FlowSpec(op_id=0, ready=1.0, work=2.0, latency=0.5,
+                               hold=True, duration=2.5)])
+    assert r.start == 1.0 and r.wire_end == 3.0 and r.end == 3.5
+    assert not r.contended
+
+
+def test_fair_share_splits_bandwidth():
+    # two jobs, identical flows, same link: each gets half rate -> both
+    # wires take twice as long
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, job=f"j{i}")
+             for i in range(2)]
+    res = run_flows(flows)
+    for r in res:
+        assert r.contended
+        assert r.wire_end == pytest.approx(2.0, rel=1e-12)
+
+
+def test_fair_share_releases_capacity():
+    # j1's short flow finishes first; j0 then speeds back up:
+    # overlap at half rate for 1s burns 0.5 of j0's 1.0 work -> ends at 1.5
+    res = run_flows([
+        FlowSpec(op_id=0, ready=0.0, work=1.0, job="j0"),
+        FlowSpec(op_id=1, ready=0.0, work=0.5, job="j1"),
+    ])
+    assert res[1].wire_end == pytest.approx(1.0, rel=1e-12)
+    assert res[0].wire_end == pytest.approx(1.5, rel=1e-12)
+
+
+def test_job_serializes_but_latency_overlaps_when_not_held():
+    # same job: second wire starts at first wire's end, not after its latency
+    res = run_flows([
+        FlowSpec(op_id=0, ready=0.0, work=1.0, latency=10.0, priority=0),
+        FlowSpec(op_id=1, ready=0.0, work=1.0, latency=0.0, priority=1),
+    ])
+    assert res[0].wire_end == pytest.approx(1.0)
+    assert res[0].end == pytest.approx(11.0)
+    assert res[1].start == pytest.approx(1.0)
+
+
+def test_priority_orders_admission_within_job():
+    res = run_flows([
+        FlowSpec(op_id=0, ready=0.0, work=1.0, priority=1.0),
+        FlowSpec(op_id=1, ready=0.0, work=1.0, priority=0.0),
+    ])
+    assert res[1].start == 0.0 and res[0].start == pytest.approx(1.0)
+
+
+def test_fractional_link_capacity_consistent():
+    # capacity < 1.0 means no flow ever runs at full rate: the closed-form
+    # (share == 1) completion must not apply, and the reported times must
+    # agree with the fluid clock that admits the next flow
+    res = run_flows([FlowSpec(op_id=0, ready=0.0, work=1.0, job="a"),
+                     FlowSpec(op_id=1, ready=0.0, work=1.0, job="a")],
+                    capacities={"nic": 0.5})
+    assert res[0].wire_end == pytest.approx(2.0, rel=1e-12)
+    assert res[1].start == pytest.approx(2.0, rel=1e-12)
+    assert res[1].wire_end == pytest.approx(4.0, rel=1e-12)
+
+
+def test_tiny_residual_work_terminates():
+    # sub-ulp residuals must complete instead of stalling the loop
+    flows = [FlowSpec(op_id=i, ready=0.1 * i, work=1e-7 if i % 2 else 1e3,
+                      job=f"j{i % 3}") for i in range(30)]
+    res = run_flows(flows)
+    assert len(res) == 30
+
+
+# ---------------------------------------------------------------------------
+# schedule invariants (satellite: property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 50), seed=st.integers(0, 10_000),
+       sched=st.sampled_from(["fifo", "priority", "chunked"]),
+       k=st.integers(1, 8))
+def test_lowering_conserves_bucket_bytes(n, seed, sched, k):
+    tl = _random_timeline(n, seed)
+    buckets = fuse_buckets(tl, CommConfig())
+    plan = lower_buckets([(b.flush_time, b.size, b.n_tensors) for b in buckets],
+                         scheduler=sched, n_chunks=k)
+    assert plan.n_buckets == len(buckets)
+    # bytes conserved overall and per bucket
+    assert plan.total_bytes == pytest.approx(sum(b.size for b in buckets),
+                                             rel=1e-9)
+    per_bucket = {}
+    for op in plan.ops:
+        per_bucket[op.bucket_id] = per_bucket.get(op.bucket_id, 0.0) + op.size
+    for i, b in enumerate(buckets):
+        assert per_bucket[i] == pytest.approx(b.size, rel=1e-9)
+    # per-tensor negotiation charged exactly once per bucket
+    tensors = {}
+    for op in plan.ops:
+        tensors[op.bucket_id] = tensors.get(op.bucket_id, 0) + op.n_tensors
+    for i, b in enumerate(buckets):
+        assert tensors[i] == b.n_tensors
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 10_000),
+       bw=st.floats(1.0, 100.0))
+def test_fifo_bit_exact_vs_legacy_serialized_loop(n, seed, bw):
+    tl = _random_timeline(n, seed)
+    r = simulate(tl, n_workers=16, bandwidth=bw * GBPS,
+                 transport="horovod_tcp")
+    ref = _legacy_serialized(tl, 16, bw * GBPS, "horovod_tcp")
+    assert len(r.buckets) == len(ref)
+    for b, (start, end) in zip(r.buckets, ref):
+        assert b.start == start          # bit-exact, not approx
+        assert b.end == end
+    if ref:
+        assert r.t_sync == max(e for _, e in ref)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 10_000),
+       bw=st.floats(1.0, 100.0),
+       sched=st.sampled_from(["priority", "chunked"]),
+       transport=st.sampled_from(["ideal", "horovod_tcp"]))
+def test_pipelined_schedules_end_no_later_than_serialized(n, seed, bw, sched,
+                                                          transport):
+    tl = _random_timeline(n, seed)
+    fifo = simulate(tl, n_workers=16, bandwidth=bw * GBPS,
+                    transport=transport)
+    other = simulate(tl, n_workers=16, bandwidth=bw * GBPS,
+                     transport=transport, scheduler=sched)
+    assert other.t_sync <= fifo.t_sync + 1e-12
+    assert other.t_overhead <= fifo.t_overhead + 1e-12
+
+
+def test_paper_models_schedulers_never_worse():
+    for model in ("resnet50", "vgg16"):
+        tl = from_cnn(model)
+        for bw in (5.0, 25.0, 100.0):
+            fifo = simulate(tl, n_workers=64, bandwidth=bw * GBPS,
+                            transport="horovod_tcp")
+            for sched in ("priority", "chunked"):
+                r = simulate(tl, n_workers=64, bandwidth=bw * GBPS,
+                             transport="horovod_tcp", scheduler=sched)
+                assert r.t_overhead <= fifo.t_overhead + 1e-12
+                assert r.scheduler == sched
+
+
+def test_chunked_alias_and_unknown_scheduler():
+    assert canonical_scheduler("chunked-pipelined") == "chunked"
+    assert canonical_scheduler("bytescheduler") == "priority"
+    with pytest.raises(KeyError):
+        canonical_scheduler("nope")
+    assert set(SCHEDULERS) == {"fifo", "priority", "chunked"}
+
+
+def test_priority_serves_front_layers_first():
+    # backward emits last layers first -> bucket 0 is the model's tail;
+    # priority must serve the *front* (last-flushed) buckets first
+    buckets = [(0.0, 100.0, 1), (0.01, 100.0, 1), (0.02, 100.0, 1)]
+    plan = lower_buckets(buckets, scheduler="priority", n_chunks=1)
+    assert plan.bucket_order() == (2, 1, 0)
+    assert lower_buckets(buckets, scheduler="fifo").bucket_order() == (0, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# fusion-buffer tensor accounting (satellite: slab-split fix)
+# ---------------------------------------------------------------------------
+
+def test_slab_split_counts_split_tensor_in_remainder():
+    comm = CommConfig(fusion_buffer_mb=1.0, timeout_ms=1e9)
+    limit = 1024 * 1024
+    # one huge gradient (3.5 slabs), then two small ones
+    tl = _mk_timeline([0.0, 0.001, 0.002],
+                      [3.5 * limit, 1024.0, 2048.0])
+    buckets = fuse_buckets(tl, comm)
+    assert [b.n_tensors for b in buckets] == [1, 1, 1, 3]
+    # remainder bucket carries the split tensor's tail + the two new ones
+    assert buckets[-1].size == pytest.approx(0.5 * limit + 3072)
+    assert sum(b.size for b in buckets) == pytest.approx(3.5 * limit + 3072)
+
+
+def test_exact_slab_fit_has_no_phantom_tensor():
+    comm = CommConfig(fusion_buffer_mb=1.0, timeout_ms=1e9)
+    limit = 1024 * 1024
+    tl = _mk_timeline([0.0, 0.001], [2.0 * limit, 1024.0])
+    buckets = fuse_buckets(tl, comm)
+    # the big tensor fills exactly two slabs; the small one starts fresh
+    assert [b.n_tensors for b in buckets] == [1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# topology-aware wire bytes (satellite)
+# ---------------------------------------------------------------------------
+
+def test_switchml_wire_bytes_independent_of_n():
+    tl = from_cnn("resnet50")
+    ring = simulate(tl, n_workers=64, bandwidth=25 * GBPS, topology="ring")
+    sw = simulate(tl, n_workers=64, bandwidth=25 * GBPS, topology="switchml")
+    total = tl.total_bytes
+    # in-network aggregation: each worker streams ~S; ring moves 2S(N-1)/N
+    assert sw.wire_bytes_per_worker == pytest.approx(total, rel=1e-6)
+    assert ring.wire_bytes_per_worker == pytest.approx(
+        2 * total * 63 / 64, rel=1e-6)
+
+
+def test_hierarchical_wire_bytes_counts_ici_stage():
+    tl = from_cnn("resnet50")
+    r = simulate(tl, n_workers=64, bandwidth=100 * GBPS,
+                 topology="hierarchical", n_pods=4)
+    # 16 devices per pod: ICI carries 2*S*15/16
+    assert r.wire_bytes_per_worker == pytest.approx(
+        2 * tl.total_bytes * 15 / 16, rel=1e-6)
+
+
+def test_utilization_bounded_everywhere():
+    tl = from_cnn("vgg16")
+    for topo in ("ring", "switchml", "param_server"):
+        for sched in ("fifo", "priority", "chunked"):
+            r = simulate(tl, n_workers=16, bandwidth=10 * GBPS,
+                         topology=topo, scheduler=sched)
+            assert 0.0 <= r.network_utilization <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# multi-job contention
+# ---------------------------------------------------------------------------
+
+def test_contention_single_job_degenerates_to_simulate():
+    tl = from_cnn("resnet50")
+    (r,) = simulate_contention([tl], n_workers=64, bandwidth=25 * GBPS)
+    ref = simulate(tl, n_workers=64, bandwidth=25 * GBPS)
+    assert r.t_sync == ref.t_sync and r.t_overhead == ref.t_overhead
+
+
+def test_contention_two_jobs_slower_than_alone():
+    tls = [from_cnn("resnet50"), from_cnn("vgg16")]
+    shared = simulate_contention(tls, n_workers=64, bandwidth=25 * GBPS)
+    for tl, r in zip(tls, shared):
+        alone = simulate(tl, n_workers=64, bandwidth=25 * GBPS)
+        assert r.t_sync >= alone.t_sync - 1e-12
+    # at least one job must actually feel the contention
+    assert any(r.t_sync > simulate(tl, n_workers=64,
+                                   bandwidth=25 * GBPS).t_sync + 1e-6
+               for tl, r in zip(tls, shared))
+
+
+# ---------------------------------------------------------------------------
+# simulator <-> runtime parity
+# ---------------------------------------------------------------------------
+
+def test_bucket_plan_comm_plan_parity():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.parallel.grad_sync import BucketPlan
+
+    shapes = [(1000, 100)] * 5 + [(10,)]
+    bp = BucketPlan(shapes, [jnp.float32] * len(shapes),
+                    limit_bytes=1024 * 1024)
+    assert bp.n_buckets > 1
+    assert sum(bp.bucket_tensors) == len(shapes)
+    fifo = bp.comm_plan(CommConfig(scheduler="fifo"))
+    pri = bp.comm_plan(CommConfig(scheduler="priority"))
+    assert fifo.bucket_order() == tuple(range(bp.n_buckets))
+    assert pri.bucket_order() == tuple(reversed(range(bp.n_buckets)))
+    # same bytes the simulator's lowering would schedule: packed f32 slabs
+    assert fifo.total_bytes == pytest.approx(
+        sum(s * 4 for s in bp.bucket_sizes))
+    # the runtime and the simulator lower through the *same* registry
+    from repro.core import schedule
+    assert bp.comm_plan.__module__ == "repro.parallel.grad_sync"
+    assert schedule.lower_buckets is lower_buckets
