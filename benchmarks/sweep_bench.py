@@ -1,0 +1,296 @@
+"""Sweep-engine performance benchmark — the repo's perf trajectory seed.
+
+Measures three things and writes them to ``BENCH_sweep.json``:
+
+- **sweep_cells_per_sec** — end-to-end simulator throughput over a fixed
+  mixed grid (models x bandwidths x schedulers x contention), run serially
+  so the number is executor-independent and comparable across commits;
+- **engine_events_per_sec / stress_speedup_vs_seed** — the discrete-event
+  engine on the stress workload the PR-3 acceptance pins (8 contending
+  jobs x chunked ``n_chunks=32`` -> thousands of flows on one fair-share
+  link), against the retained seed engine
+  (``tests/_reference_engine.py``);
+- **fastpath_speedup** — the closed-form fifo path in
+  ``repro.core.simulator`` against the event engine on a long serialized
+  plan.
+
+Usage::
+
+    python -m benchmarks.sweep_bench                 # full, writes JSON
+    python -m benchmarks.sweep_bench --quick         # CI: fewer reps
+    python -m benchmarks.sweep_bench --quick \
+        --baseline artifacts/bench/BENCH_sweep.json  # regression gate
+
+With ``--baseline``, exits non-zero when sweep throughput regresses more
+than :data:`REGRESSION_FACTOR` x against the committed baseline (the CI
+``bench`` job's gate).  Absolute cells/sec is machine-dependent, so the
+gate compares *machine-normalized* throughput: the retained seed engine is
+frozen code, so its measured stress time on the same run is a pure
+machine-speed probe, and ``cells_per_sec * stress_seed_ms`` (cells per
+unit of seed-engine work) cancels hardware speed out of the comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT / "tests"))   # the retained seed engine
+
+SCHEMA_VERSION = 1
+KIND = "repro-sweep-bench"
+REGRESSION_FACTOR = 2.0
+DEFAULT_OUT = "BENCH_sweep.json"
+DEFAULT_BASELINE = REPO_ROOT / "artifacts" / "bench" / "BENCH_sweep.json"
+
+
+# each timed rep runs the workload enough times to accumulate this much CPU
+# time, so kernels with coarse (10 ms tick) CLOCK_PROCESS_CPUTIME_ID still
+# resolve the measurement to a few percent
+MIN_REP_CPU_SECONDS = 0.25
+
+
+def _best(fn: Callable[[], None], reps: int) -> float:
+    """Best-of-N per-call *CPU* time.
+
+    Everything this bench measures is single-process, CPU-bound Python, so
+    ``process_time`` equals wall clock on an idle machine but is immune to
+    noisy-neighbour scheduling jitter — a CI runner under load must not
+    trip the regression gate.  Kernels can tick CLOCK_PROCESS_CPUTIME_ID
+    as coarsely as 10 ms, so a timeit-style autorange grows an inner loop
+    until one rep spans :data:`MIN_REP_CPU_SECONDS` of *measured* CPU,
+    bounding quantization error to a few percent; best-of-N then absorbs
+    cache-warmup and allocator variance."""
+    was_enabled = gc.isenabled()
+    gc.disable()                    # like timeit: GC pauses are not the code
+    try:
+        inner = 1
+        while True:
+            t0 = time.process_time()
+            for _ in range(inner):
+                fn()
+            dt = time.process_time() - t0
+            if dt >= MIN_REP_CPU_SECONDS:
+                break
+            inner *= 10 if dt <= 0.0 else min(10, max(
+                2, int(MIN_REP_CPU_SECONDS / dt) + 1))
+        best = dt / inner
+        for _ in range(reps - 1):
+            t0 = time.process_time()
+            for _ in range(inner):
+                fn()
+            best = min(best, (time.process_time() - t0) / inner)
+        return best
+    finally:
+        if was_enabled:
+            gc.enable()
+        gc.collect()
+
+
+def _stress_flows(jobs: int = 8, n_chunks: int = 32):
+    """The acceptance stress workload: ``jobs`` identical VGG16 trainings,
+    chunked at ``n_chunks``, contending for one fair-share link."""
+    from repro.configs.base import CommConfig
+    from repro.core.addest import AddEst
+    from repro.core.network_model import RingAllReduce
+    from repro.core.schedule import lower_buckets, plan_to_flows
+    from repro.core.simulator import fuse_buckets
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS, get_transport
+
+    tl = from_cnn("vgg16")
+    tr = get_transport("horovod_tcp")
+    cost = RingAllReduce(64, tr.effective(25 * GBPS), AddEst.v100())
+    buckets = [(b.flush_time, b.size, b.n_tensors)
+               for b in fuse_buckets(tl, CommConfig())]
+    flows, base = [], 0
+    for j in range(jobs):
+        plan = lower_buckets(buckets, scheduler="chunked", n_chunks=n_chunks)
+        fl = plan_to_flows(plan, cost, tr.per_tensor_overhead,
+                           job=f"job{j}", op_id_base=base)
+        base += len(fl)
+        flows.extend(fl)
+    return flows
+
+
+def bench_engine(reps: int) -> Dict[str, float]:
+    from repro.core.events import run_flows
+    from _reference_engine import run_reference_flows
+
+    flows = _stress_flows()
+    assert len(flows) >= 2000, "stress workload must be >= 2000 flows"
+    # correctness cross-check before timing anything
+    ref = run_reference_flows(flows, max_iters_factor=100)
+    new = run_flows(flows)
+    worst = max(abs(a.end - b.end) / max(abs(a.end), 1e-12)
+                for a, b in zip(ref, new))
+    if worst > 1e-9:
+        raise RuntimeError(f"engine diverges from seed by {worst:.2e}")
+    t_new = _best(lambda: run_flows(flows), reps + 2)
+    t_ref = _best(lambda: run_reference_flows(flows, max_iters_factor=100),
+                  reps + 1)
+    n = len(flows)
+    return {
+        "stress_flows": float(n),
+        "stress_seed_ms": t_ref * 1e3,
+        "stress_engine_ms": t_new * 1e3,
+        "stress_speedup_vs_seed": t_ref / t_new,
+        "engine_flows_per_sec": n / t_new,
+        # each flow is one admission plus one completion event
+        "engine_events_per_sec": 2 * n / t_new,
+    }
+
+
+def bench_sweep(reps: int) -> Dict[str, float]:
+    from repro.experiments import run_spec
+    from repro.experiments.spec import ExperimentSpec
+
+    spec = ExperimentSpec(
+        name="bench-sweep", models=("resnet50", "vgg16"),
+        n_servers=(2, 8), bandwidth_gbps=(5.0, 25.0, 100.0),
+        transport=("ideal", "horovod_tcp"),
+        scheduler=("fifo", "priority", "chunked"), sched_chunks=16)
+    contention = ExperimentSpec(
+        name="bench-contention", models=("vgg16",), n_servers=(8,),
+        bandwidth_gbps=(25.0,), transport=("horovod_tcp",),
+        scheduler=("chunked",), n_jobs=(1, 2, 4, 8), sched_chunks=32)
+    n_cells = spec.n_cells + contention.n_cells
+    t = _best(lambda: (run_spec(spec, executor="serial"),
+                       run_spec(contention, executor="serial")), reps)
+    return {
+        "sweep_cells": float(n_cells),
+        "sweep_seconds": t,
+        "sweep_cells_per_sec": n_cells / t,
+    }
+
+
+def bench_fastpath(reps: int) -> Dict[str, float]:
+    from repro.configs.base import CommConfig
+    from repro.core.addest import AddEst
+    from repro.core.events import run_flows
+    from repro.core.network_model import RingAllReduce
+    from repro.core.schedule import lower_buckets, plan_to_flows
+    from repro.core.simulator import _fifo_fast_results, fuse_buckets
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS, get_transport
+
+    # a small fusion buffer makes a long serialized fifo plan
+    tl = from_cnn("vgg16")
+    tr = get_transport("horovod_tcp")
+    cost = RingAllReduce(64, tr.effective(10 * GBPS), AddEst.v100())
+    buckets = fuse_buckets(tl, CommConfig(fusion_buffer_mb=2.0))
+    plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
+                          for b in buckets], scheduler="fifo")
+    flows = plan_to_flows(plan, cost, tr.per_tensor_overhead)
+    fast = _fifo_fast_results(plan, flows)
+    slow = run_flows(flows)
+    if fast is None or any(a.end != b.end for a, b in zip(fast, slow)):
+        raise RuntimeError("fifo fast path is not bit-exact with the engine")
+    t_fast = _best(lambda: _fifo_fast_results(plan, flows), reps + 1)
+    t_engine = _best(lambda: run_flows(flows), reps + 1)
+    return {
+        "fastpath_plan_ops": float(len(flows)),
+        "fastpath_ms": t_fast * 1e3,
+        "engine_fifo_ms": t_engine * 1e3,
+        "fastpath_speedup": t_engine / t_fast,
+    }
+
+
+def run_bench(quick: bool) -> Dict:
+    reps = 1 if quick else 3
+    metrics: Dict[str, float] = {}
+    metrics.update(bench_sweep(reps))
+    metrics.update(bench_engine(reps))
+    metrics.update(bench_fastpath(reps))
+    return {
+        "kind": KIND,
+        "schema_version": SCHEMA_VERSION,
+        "quick": quick,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "metrics": metrics,
+    }
+
+
+def _normalized_throughput(metrics: Dict[str, float]) -> Optional[float]:
+    """Sweep cells per unit of seed-engine work — machine-independent.
+
+    ``stress_seed_ms`` measures frozen code, so it scales with the host's
+    single-core speed exactly as the (serial, CPU-bound) sweep does;
+    multiplying cancels the hardware out and the gate compares only what
+    the *changed* code costs."""
+    cells = metrics.get("sweep_cells_per_sec")
+    probe = metrics.get("stress_seed_ms")
+    if not cells or not probe:
+        return None
+    return cells * probe
+
+
+def check_regression(result: Dict, baseline_path: Path) -> List[str]:
+    try:
+        base = json.loads(baseline_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read baseline {baseline_path}: {e}"]
+    if base.get("kind") != KIND:
+        return [f"{baseline_path} is not a {KIND}"]
+    failures = []
+    old = _normalized_throughput(base["metrics"])
+    new = _normalized_throughput(result["metrics"])
+    if old and new and new < old / REGRESSION_FACTOR:
+        failures.append(
+            f"machine-normalized sweep throughput regressed "
+            f">{REGRESSION_FACTOR}x: baseline {old:.0f} -> {new:.0f} "
+            f"cells/sec x seed-ms (raw: "
+            f"{base['metrics']['sweep_cells_per_sec']:.1f} -> "
+            f"{result['metrics']['sweep_cells_per_sec']:.1f} cells/sec)")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.sweep_bench",
+                                 description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="single-rep timings (CI)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline BENCH_sweep.json to gate against "
+                         f"(e.g. {DEFAULT_BASELINE.relative_to(REPO_ROOT)})")
+    args = ap.parse_args(argv)
+
+    result = run_bench(args.quick)
+    m = result["metrics"]
+    print(f"sweep:   {m['sweep_cells']:.0f} cells in {m['sweep_seconds']:.2f}s"
+          f" -> {m['sweep_cells_per_sec']:.1f} cells/sec")
+    print(f"engine:  {m['stress_flows']:.0f} stress flows: seed "
+          f"{m['stress_seed_ms']:.1f} ms -> engine {m['stress_engine_ms']:.1f}"
+          f" ms ({m['stress_speedup_vs_seed']:.1f}x, "
+          f"{m['engine_events_per_sec'] / 1e3:.0f}k events/sec)")
+    print(f"fastpath: {m['fastpath_plan_ops']:.0f}-op fifo plan: engine "
+          f"{m['engine_fifo_ms']:.2f} ms -> closed form "
+          f"{m['fastpath_ms']:.2f} ms ({m['fastpath_speedup']:.1f}x)")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out}")
+
+    if args.baseline:
+        failures = check_regression(result, Path(args.baseline))
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}")
+            return 1
+        print(f"no perf regression vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,22 +20,69 @@ a collective) — against named link resources:
 Exactness: a ``hold`` flow whose wire phase never shared its link completes
 at ``start + duration`` with ``duration`` precomputed by the caller as a
 single float expression — so the ``fifo`` schedule reproduces the legacy
-serialized loop bit-for-bit, not just within tolerance.
+serialized loop bit-for-bit, not just within tolerance.  A flow counts as
+``contended`` only if it shared its link for a *nonzero* duration; the seed
+engine also flagged zero-duration overlaps (two flows co-admitted at an
+instant where one has zero residual work), which changed no completion time
+beyond re-rounding but cosmetically dropped the closed form.
 
 Times in seconds; ``work`` is wire time at full link rate (the caller bakes
 bandwidth into it via the cost model).
+
+Engine architecture (the O((n+e) log n) event calendar)
+-------------------------------------------------------
+
+The seed implementation rescanned every pending/running flow at every event
+and advanced all wires step by step — quadratic once plans reach thousands
+of flows.  This version is indexed end to end:
+
+- **per-job admission state**: flows sort once into service order
+  ``(priority, op_id)``.  When ready times are non-decreasing along that
+  order (fifo/chunked plans), the next admissible flow is a pointer
+  increment; otherwise (priority plans, where late-flushed buckets preempt)
+  the job keeps a ready-time heap of *gated* flows plus a priority heap of
+  admissible ones, so an admission is O(log n) instead of a rescan.
+- **per-link fluid service clocks**: all flows on a link progress at the
+  same fair share, so in link-service time a flow admitted when the link
+  had delivered ``S`` per-flow seconds completes at exactly ``S + work`` —
+  a *static* order.  Each link keeps a heap of these completion marks;
+  membership changes rescale only the rate at which the clock advances,
+  never the order, so projections are recomputed only when a link's
+  membership (and hence share) changes, and only for the heap top.
+- **versioned calendar entries**: the global ``heapq`` calendar holds each
+  link's next projected completion stamped with the link's membership
+  version, plus per-job admission triggers.  A membership change bumps the
+  version; stale entries are lazily discarded on pop rather than searched
+  for and removed.
+- **completion spin + bulk commit**: when a link's next completion precedes
+  everything else on the calendar, completions are served in a tight loop
+  without calendar round-trips; and while membership is *constant* (every
+  completion instantly re-admits the job's next flow), each job's future
+  completion marks are plain prefix sums of its works, so whole saturated
+  stretches are computed with vectorized numpy cumulative sums and
+  committed in one pass, up to the first membership-changing boundary
+  (ready gate, ``hold`` flow, job exhaustion, or calendar interrupt).
+
+Termination is progress-based: the engine raises only when the calendar
+drains with flows outstanding, or when event processing stops advancing
+time, admitting, or completing — not on an iteration-count heuristic, which
+could false-trip on heavily contended multi-job plans.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from heapq import heapify, heappop, heappush
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
 
 DEFAULT_LINK = "nic"
 DEFAULT_JOB = "job0"
 
+_DONE, _ADMIT = 0, 1       # calendar event kinds; completions sort first
+_INF = float("inf")
 
-@dataclass(frozen=True)
-class FlowSpec:
+
+class FlowSpec(NamedTuple):
     """One wire transfer plus a fixed post-wire latency.
 
     ``priority`` orders admission within a job (smaller first; ties broken
@@ -55,8 +102,7 @@ class FlowSpec:
     duration: Optional[float] = None  # precomputed work+latency (hold flows)
 
 
-@dataclass(frozen=True)
-class FlowResult:
+class FlowResult(NamedTuple):
     op_id: int
     job: str
     start: float                     # admission (wire begins)
@@ -70,18 +116,50 @@ class FlowResult:
         return self.end - self.start
 
 
-class _Run:
-    __slots__ = ("flow", "start", "remaining", "contended")
+class _Link:
+    """Fluid fair-share link: a service clock plus a completion-mark heap.
 
-    def __init__(self, flow: FlowSpec, start: float):
-        self.flow = flow
-        self.start = start
-        self.remaining = flow.work
-        self.contended = False
+    ``S`` is the per-flow service delivered since the link last went idle;
+    a flow admitted at service mark ``S`` completes when the clock reaches
+    ``S + work``.  ``version`` stamps calendar entries for lazy
+    invalidation on membership changes.
+    """
+
+    __slots__ = ("cap", "n", "share", "S", "t_last", "heap", "version",
+                 "all_contended")
+
+    def __init__(self, cap: float):
+        self.cap = cap
+        self.n = 0
+        self.share = 1.0 if cap >= 1.0 else cap
+        self.S = 0.0
+        self.t_last = 0.0
+        self.heap: List = []        # (service completion mark, flow index)
+        self.version = 0
+        self.all_contended = False
+
+
+class _Job:
+    """Serialization resource: one wire in flight, priority admission."""
+
+    __slots__ = ("order", "rdy", "ptr", "gated", "readyq", "free", "busy",
+                 "link", "onp", "wk", "rd", "hd", "lt")
+
+    def __init__(self):
+        self.order: List[int] = []   # flow indices in (priority, op_id) order
+        self.rdy: List[float] = []   # ready times along ``order`` (ptr mode)
+        self.ptr = 0
+        self.gated: Optional[List] = None   # ready-time heap (heap mode)
+        self.readyq: Optional[List] = None  # (priority, op_id, idx) heap
+        self.free = 0.0
+        self.busy = False
+        self.link: Optional[_Link] = None   # sole link, if homogeneous
+        # numpy views along ``order`` for the bulk-commit path (lazy)
+        self.onp = self.wk = self.rd = self.hd = self.lt = None
 
 
 class NetworkEngine:
-    """Event-queue executor for a set of flows over shared links.
+    """Event-calendar executor for a set of flows over shared links.
 
     ``capacities`` maps link name -> number of flows that can run at full
     rate before fair sharing kicks in (default 1.0 — the whole link).
@@ -90,121 +168,361 @@ class NetworkEngine:
     def __init__(self, capacities: Optional[Dict[str, float]] = None):
         self.capacities = dict(capacities or {})
 
-    def _share(self, link: str, n_active: int) -> float:
-        cap = self.capacities.get(link, 1.0)
-        return min(1.0, cap / n_active) if n_active else 1.0
-
     def run(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
         """Execute ``flows``; returns results in input order."""
-        pending: Dict[str, List[FlowSpec]] = {}
-        for f in flows:
-            pending.setdefault(f.job, []).append(f)
-        for q in pending.values():
-            # stable service order: (priority, op_id); ready gates admission
-            q.sort(key=lambda f: (f.priority, f.op_id), reverse=True)
-
-        job_free: Dict[str, float] = {j: 0.0 for j in pending}
-        running: Dict[str, _Run] = {}          # job -> active wire
-        on_link: Dict[str, List[_Run]] = {}
-        results: Dict[int, FlowResult] = {}
-        t = 0.0
         n_total = len(flows)
-        max_iters = 10 * n_total + 100
+        if not n_total:
+            return []
+        caps = self.capacities
 
-        def _pick(job: str) -> Optional[FlowSpec]:
-            """Highest-priority flow of ``job`` that is ready at ``t``."""
-            q = pending[job]
-            best_i = -1
-            for i in range(len(q) - 1, -1, -1):  # sorted reverse: best last
-                if q[i].ready <= t:
-                    best_i = i
-                    break
-            if best_i < 0:
-                return None
-            return q.pop(best_i)
+        # -- setup: columnar views, grouping, service order, mode -----------
+        (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
+         _du_col) = zip(*flows)
 
-        iters = 0
-        while len(results) < n_total:
-            iters += 1
-            if iters > max_iters:
-                raise RuntimeError("event engine failed to converge "
-                                   f"({len(results)}/{n_total} flows done)")
+        links: Dict[str, _Link] = {
+            name: _Link(caps.get(name, 1.0)) for name in set(lk_col)}
+        link_of = list(map(links.__getitem__, lk_col))
+        one_link = len(links) == 1
 
-            # -- admissions at the current time ------------------------------
-            admitted = False
-            for job in pending:
-                if job in running or job_free[job] > t or not pending[job]:
-                    continue
-                flow = _pick(job)
-                if flow is None:
-                    continue
-                run = _Run(flow, start=t)
-                active = on_link.setdefault(flow.link, [])
-                if active:
-                    run.contended = True
-                    for other in active:
-                        other.contended = True
-                if self._share(flow.link, 1) < 1.0:
-                    # a link with fractional capacity never runs a flow at
-                    # full rate, so the closed-form completion is invalid
-                    run.contended = True
-                active.append(run)
-                running[job] = run
-                admitted = True
-            if admitted:
-                continue  # shares changed; recompute projections
+        by_job: Dict[str, List[int]] = {}
+        for i, name in enumerate(job_col):
+            try:
+                by_job[name].append(i)
+            except KeyError:
+                by_job[name] = [i]
+        jobs: Dict[str, _Job] = {name: _Job() for name in by_job}
+        job_of = list(map(jobs.__getitem__, job_col))
 
-            # -- next event: a wire completion or a job becoming serviceable -
-            t_next = None
-            for run in running.values():
-                share = self._share(run.flow.link, len(on_link[run.flow.link]))
-                proj = t + run.remaining / share
-                if t_next is None or proj < t_next:
-                    t_next = proj
-            for job, q in pending.items():
-                if job in running or not q:
-                    continue
-                earliest = min(f.ready for f in q)
-                trigger = max(job_free[job], earliest)
-                if t_next is None or trigger < t_next:
-                    t_next = trigger
-            if t_next is None:
-                raise RuntimeError("event engine stalled with pending flows")
-            t_next = max(t_next, t)
+        pr_np = np.asarray(pr_col)
+        op_np = np.asarray(op_col)
+        rd_np = np.asarray(rdy_col)
+        g_wk = g_hd = g_lt = None           # global columns (lazy, for bulk)
 
-            # -- advance all running wires to t_next -------------------------
-            dt = t_next - t
-            done: List[Tuple[str, _Run]] = []
-            for job, run in running.items():
-                share = self._share(run.flow.link, len(on_link[run.flow.link]))
-                run.remaining -= dt * share
-                # done when the residual is negligible — or too small to
-                # advance the clock at all (absorbed below ulp(t_next)),
-                # which would otherwise stall the loop
-                if (run.remaining <= run.flow.work * 1e-12 + 1e-18
-                        or t_next + run.remaining / share <= t_next):
-                    done.append((job, run))
-            t = t_next
+        cal: List = []              # (time, kind, seq, ...) event calendar
+        seq = 0
+        for name, idxs in by_job.items():
+            jb = jobs[name]
+            ix = np.asarray(idxs, dtype=np.intp)
+            if ix.shape[0] > 1:
+                ix = ix[np.lexsort((op_np[ix], pr_np[ix]))]
+            order = jb.order = ix.tolist()
+            rd_ix = rd_np[ix]
+            rdy = jb.rdy = rd_ix.tolist()
+            if one_link:
+                jb.link = link_of[order[0]]
+            else:
+                first = link_of[order[0]]
+                jb.link = first if all(link_of[i] is first
+                                       for i in order) else None
+            if len(rdy) == 1 or bool((rd_ix[1:] >= rd_ix[:-1]).all()):
+                trigger = rdy[0]
+            else:
+                # ready times regress along service order (e.g. priority
+                # plans): gate admissions through a ready-time heap
+                jb.gated = [(rdy_col[i], pr_col[i], op_col[i], i)
+                            for i in order]
+                heapify(jb.gated)
+                jb.readyq = []
+                trigger = jb.gated[0][0]
+            seq += 1
+            heappush(cal, (trigger if trigger > 0.0 else 0.0, _ADMIT, seq, jb))
 
-            for job, run in done:
-                flow = run.flow
-                if not run.contended:
-                    # exact closed form: share was 1.0 throughout
-                    wire_end = run.start + flow.work
-                    if flow.hold and flow.duration is not None:
-                        end = run.start + flow.duration
-                    else:
-                        end = wire_end + flow.latency
+        start = np.zeros(n_total)
+        wire = np.zeros(n_total)
+        end = np.zeros(n_total)
+        contended = np.zeros(n_total, dtype=bool)
+        n_done = 0
+        stale = 0                   # consecutive no-progress calendar pops
+        flws = flows                # local alias for the hot loops
+
+        # -- admission: put flow ``i`` on its link at time ``t`` ------------
+        def _admit(i: int, jb: _Job, t: float) -> _Link:
+            L = link_of[i]
+            if L.n:
+                if t > L.t_last:
+                    L.S += (t - L.t_last) * L.share
+                L.t_last = t
+                contended[i] = True
+                if not L.all_contended:
+                    for _, k in L.heap:
+                        contended[k] = True
+                    L.all_contended = True
+            else:
+                # fresh busy period: restart the service clock so the
+                # single-flow closed form stays exact (mark == work)
+                L.S = 0.0
+                L.t_last = t
+                if L.cap < 1.0:
+                    contended[i] = True
+                    L.all_contended = True
+            heappush(L.heap, (L.S + wk_col[i], i))
+            L.n += 1
+            c = L.cap
+            L.share = 1.0 if c >= L.n else c / L.n
+            L.version += 1
+            start[i] = t
+            jb.busy = True
+            return L
+
+        # -- next-admission trigger for a job that just freed ---------------
+        def _schedule_admit(jb: _Job, t: float) -> None:
+            nonlocal seq
+            if jb.gated is None:
+                if jb.ptr < len(jb.order):
+                    trig = jb.rdy[jb.ptr]
+                    if trig < jb.free:
+                        trig = jb.free
+                    seq += 1
+                    heappush(cal, (trig, _ADMIT, seq, jb))
+            else:
+                if jb.readyq:
+                    seq += 1
+                    heappush(cal, (jb.free, _ADMIT, seq, jb))
+                elif jb.gated:
+                    trig = jb.gated[0][0]
+                    if trig < jb.free:
+                        trig = jb.free
+                    seq += 1
+                    heappush(cal, (trig, _ADMIT, seq, jb))
+
+        # -- bulk commit: vectorized saturated stretch on link ``L`` --------
+        def _try_bulk(L: _Link, t0: float) -> int:
+            """While every completion instantly re-admits (constant
+            membership, constant share), each job's future completion marks
+            are prefix sums of its works.  Commit every completion strictly
+            before the first boundary (ready gate, hold flow, exhaustion,
+            or foreign calendar event) in one vectorized pass.  Returns the
+            number of flows committed."""
+            nonlocal n_done, g_wk, g_hd, g_lt
+            S0 = L.S
+            share = L.share
+            # drop lazily-invalidated projections so a stale early entry
+            # cannot mask how far the bulk window really extends
+            while cal and cal[0][1] == _DONE and cal[0][3] != cal[0][4].version:
+                heappop(cal)
+            t_cal = cal[0][0] if cal else _INF
+            # O(1) pre-checks on the earliest completion: if its own job
+            # cannot instantly re-admit, the very first completion is a
+            # boundary and nothing can commit
+            m_top, i_top = L.heap[0]
+            if t_cal <= t0 + (m_top - S0) / share:
+                return 0
+            jb_top = job_of[i_top]
+            p = jb_top.ptr
+            if (jb_top.gated is not None or p >= len(jb_top.order)
+                    or hd_col[jb_top.order[p - 1]]
+                    or jb_top.rdy[p] > t0 + (m_top - S0) / share):
+                return 0
+            if g_wk is None:
+                g_wk = np.asarray(wk_col)
+                g_hd = np.asarray(hd_col, dtype=bool)
+                g_lt = np.asarray(lt_col)
+            chains = []
+            t_stop = t_cal
+            for m0, i0 in L.heap:
+                jb = job_of[i0]
+                if jb.gated is not None or jb.link is not L:
+                    return 0
+                if jb.wk is None:
+                    onp = jb.onp = np.asarray(jb.order, dtype=np.intp)
+                    jb.wk = g_wk[onp]
+                    jb.rd = rd_np[onp]
+                    jb.hd = g_hd[onp]
+                    jb.lt = g_lt[onp]
+                ptr = jb.ptr
+                marks = np.empty(len(jb.order) - ptr + 1)
+                marks[0] = m0
+                marks[1:] = jb.wk[ptr:]
+                marks = np.cumsum(marks)        # exact left fold, like scalar
+                times = t0 + (marks - S0) / share
+                k = marks.shape[0] - 1          # future flows in the chain
+                if k:
+                    viol = ((jb.rd[ptr:] > times[:k])
+                            | jb.hd[ptr - 1:ptr + k - 1])
+                    nz = np.nonzero(viol)[0]
+                    v = int(nz[0]) + 1 if nz.size else k + 1
                 else:
-                    wire_end = t
-                    end = wire_end + flow.latency
-                results[flow.op_id] = FlowResult(
-                    flow.op_id, job, run.start, wire_end, end, run.contended)
-                on_link[flow.link].remove(run)
-                del running[job]
-                job_free[job] = end if flow.hold else wire_end
+                    v = 1
+                bt = times[v - 1]               # this job's boundary time
+                if bt < t_stop:
+                    t_stop = bt
+                chains.append((jb, m0, i0, marks, times, v))
+            total = 0
+            t_final = t0
+            s_final = S0
+            entries = []
+            for jb, m0, i0, marks, times, v in chains:
+                c = int(np.searchsorted(times[:v], t_stop, side="left"))
+                if c == 0:
+                    entries.append((m0, i0))
+                    continue
+                ptr = jb.ptr
+                tc = times[:c]
+                ids = np.empty(c, dtype=np.intp)
+                ids[0] = i0
+                if c > 1:
+                    ids[1:] = jb.onp[ptr:ptr + c - 1]
+                    start[ids[1:]] = tc[:-1]
+                wire[ids] = tc
+                end[ids] = tc + jb.lt[ptr - 1:ptr + c - 1]
+                contended[ids] = True
+                ia = jb.order[ptr + c - 1]      # the job's new active flow
+                tl = float(tc[-1])
+                start[ia] = tl
+                contended[ia] = True
+                jb.ptr = ptr + c
+                entries.append((float(marks[c]), ia))
+                total += c
+                if tl > t_final:
+                    t_final = tl
+                    s_final = float(marks[c - 1])
+            if not total:
+                return 0
+            L.heap = entries
+            heapify(entries)
+            L.S = s_final
+            L.t_last = t_final
+            L.version += 1
+            n_done += total
+            return total
 
-        return [results[f.op_id] for f in flows]
+        while n_done < n_total:
+            if not cal:
+                raise RuntimeError(
+                    f"event engine stalled: {n_done}/{n_total} flows done "
+                    "with an empty calendar")
+            ev = heappop(cal)
+            t = ev[0]
+
+            if ev[1] == _DONE:
+                ver, L = ev[3], ev[4]
+                if ver != L.version or not L.n:
+                    stale += 1      # lazily-invalidated projection
+                    if stale > 4 * n_total + 1000:
+                        raise RuntimeError(
+                            "event engine made no progress over "
+                            f"{stale} events ({n_done}/{n_total} flows done)")
+                    continue
+                stale = 0
+                # ---- completion spin: serve this link's completions while
+                # they precede everything else on the calendar --------------
+                while True:
+                    if t > L.t_last:
+                        L.S += (t - L.t_last) * L.share
+                    L.t_last = t
+                    s_top, i = heappop(L.heap)
+                    L.S = s_top
+                    L.n -= 1
+                    L.version += 1
+                    if L.n:
+                        c = L.cap
+                        L.share = 1.0 if c >= L.n else c / L.n
+                    else:
+                        L.all_contended = False
+                    if contended[i]:
+                        w = t
+                        e = t + lt_col[i]
+                    else:
+                        # exact closed form: share was 1.0 throughout
+                        w = float(start[i]) + wk_col[i]
+                        d = flws[i].duration
+                        if hd_col[i] and d is not None:
+                            e = float(start[i]) + d
+                        else:
+                            e = w + lt_col[i]
+                    wire[i] = w
+                    end[i] = e
+                    n_done += 1
+                    jb = job_of[i]
+                    jb.busy = False
+                    jb.free = e if hd_col[i] else w
+                    # instant re-admission keeps the spin going (the
+                    # saturated steady state); anything else goes back
+                    # through the calendar
+                    readmitted = None
+                    if not hd_col[i]:
+                        if jb.gated is None:
+                            p = jb.ptr
+                            if p < len(jb.order) and jb.rdy[p] <= t:
+                                jb.ptr = p + 1
+                                readmitted = _admit(jb.order[p], jb, t)
+                        else:
+                            g = jb.gated
+                            while g and g[0][0] <= t:
+                                r, pr, op, k = heappop(g)
+                                heappush(jb.readyq, (pr, op, k))
+                            if jb.readyq:
+                                _, _, k = heappop(jb.readyq)
+                                readmitted = _admit(k, jb, t)
+                    if readmitted is None:
+                        _schedule_admit(jb, t)
+                    elif readmitted is not L:
+                        # cross-link re-admission: project the other link
+                        seq += 1
+                        s2 = readmitted.heap[0][0]
+                        proj2 = t + (s2 - readmitted.S) / readmitted.share
+                        heappush(cal, (proj2 if proj2 > t else t, _DONE,
+                                       seq, readmitted.version, readmitted))
+                    if not L.n:
+                        break
+                    if L.n > 1 and _try_bulk(L, t):
+                        t = L.t_last
+                        if not L.n:
+                            break
+                    proj = t + (L.heap[0][0] - L.S) / L.share
+                    if proj < t:
+                        proj = t
+                    if cal and cal[0][0] < proj:
+                        seq += 1
+                        heappush(cal, (proj, _DONE, seq, L.version, L))
+                        break
+                    t = proj
+                continue
+
+            # ---- admission event ------------------------------------------
+            jb = ev[3]
+            if jb.busy:
+                stale += 1          # superseded by an instant re-admission
+                if stale > 4 * n_total + 1000:
+                    raise RuntimeError(
+                        "event engine made no progress over "
+                        f"{stale} events ({n_done}/{n_total} flows done)")
+                continue
+            if jb.free > t:         # defensive: fire again once free
+                stale += 1
+                _schedule_admit(jb, t)
+                continue
+            stale = 0
+            admitted = None
+            if jb.gated is None:
+                p = jb.ptr
+                if p < len(jb.order):
+                    if jb.rdy[p] <= t:
+                        jb.ptr = p + 1
+                        admitted = _admit(jb.order[p], jb, t)
+                    else:
+                        _schedule_admit(jb, t)
+            else:
+                g = jb.gated
+                while g and g[0][0] <= t:
+                    r, pr, op, k = heappop(g)
+                    heappush(jb.readyq, (pr, op, k))
+                if jb.readyq:
+                    _, _, k = heappop(jb.readyq)
+                    admitted = _admit(k, jb, t)
+                elif g:
+                    _schedule_admit(jb, t)
+            if admitted is not None:
+                seq += 1
+                s_top = admitted.heap[0][0]
+                proj = t + (s_top - admitted.S) / admitted.share
+                heappush(cal, (proj if proj > t else t, _DONE, seq,
+                               admitted.version, admitted))
+
+        new = tuple.__new__
+        return [new(FlowResult, row) for row in
+                zip(op_col, job_col, start.tolist(), wire.tolist(),
+                    end.tolist(), contended.tolist())]
 
 
 def run_flows(flows: Sequence[FlowSpec],

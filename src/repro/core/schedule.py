@@ -70,6 +70,23 @@ class CommPlan:
                 order.append(op.bucket_id)
         return tuple(order)
 
+    @property
+    def serialized_fifo(self) -> bool:
+        """True when the plan is one op per bucket, served in op order.
+
+        This is the structural precondition for the simulator's closed-form
+        fifo fast path: service order ``(priority, op_id)`` must equal op
+        order, which holds when priorities are non-decreasing (ties fall
+        back to ``op_id``, increasing by construction)."""
+        if self.scheduler != "fifo" or len(self.ops) != self.n_buckets:
+            return False
+        prev = -float("inf")
+        for op in self.ops:
+            if op.priority < prev:
+                return False
+            prev = op.priority
+        return True
+
 
 # ---------------------------------------------------------------------------
 # schedulers: (ready, size, n_tensors) buckets -> CommPlan
@@ -178,11 +195,11 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
     fifo schedule is bit-identical with the pre-engine serialized loop.
     """
     hold = plan.scheduler == "fifo"
+    wire_time = getattr(cost, "wire_time", cost.time)
     flows: List[FlowSpec] = []
     for op in plan.ops:
         total = cost.time(op.size) + per_tensor_overhead * op.n_tensors
-        wire = getattr(cost, "wire_time", cost.time)(op.size)
-        wire = min(wire, total)
+        wire = min(wire_time(op.size), total)
         flows.append(FlowSpec(
             op_id=op_id_base + op.op_id, ready=op.ready, work=wire,
             latency=max(0.0, total - wire), priority=op.priority,

@@ -26,12 +26,15 @@ f_sim = t_batch / (t_batch + t_overhead)   (paper Eq. in §3.1).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import CommConfig
 from repro.core.addest import AddEst
-from repro.core.events import FlowResult, run_flows
+from repro.core.events import FlowResult, FlowSpec, run_flows
 from repro.core.network_model import RingAllReduce, make_cost_model
 from repro.core.schedule import (CommPlan, canonical_scheduler,
                                  lower_buckets, plan_to_flows)
@@ -145,14 +148,110 @@ def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
     return buckets
 
 
+def _serialized_closed_form(ready: np.ndarray, dur: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized max-plus recurrence, bit-exact with the serial loop.
+
+    Solves ``start_i = max(ready_i, end_{i-1}); end_i = start_i + dur_i``
+    with numpy.  Exactness hinges on two properties: ``np.cumsum`` is a
+    strict left fold (the same float additions in the same order as the
+    serial loop), and folding each chain's start into the summand array
+    (``cumsum([ready_j, dur_j, ...])``) preserves the serial association
+    ``((ready_j + dur_j) + dur_{j+1}) + ...``.
+
+    Chain starts (indices where the link went idle) are found iteratively:
+    begin with the superset ``ready_i >= ready_{i-1} + dur_{i-1}`` (every
+    true chain start satisfies it, since ``end >= ready + dur``), compute
+    ends as if those were the starts, then demote any candidate whose gap
+    closes (``ready_j < end_{j-1}``).  Ends only grow when chains merge, so
+    each pass removes at least one false candidate and the fixpoint makes
+    exactly the serial loop's max choices.
+    """
+    n = ready.shape[0]
+    cand = np.empty(n, dtype=bool)
+    cand[0] = True
+    if n > 1:
+        cand[1:] = ready[1:] >= ready[:-1] + dur[:-1]
+    starts = np.empty(n)
+    ends = np.empty(n)
+    for _ in range(n):
+        idx = np.flatnonzero(cand)
+        if idx.shape[0] == n:
+            # every flow finds the link idle: no queueing anywhere
+            starts[:] = ready
+            ends[:] = ready + dur
+        else:
+            bounds = np.append(idx, n)
+            for a, b in zip(bounds[:-1], bounds[1:]):
+                seg = np.cumsum(np.concatenate(([ready[a]], dur[a:b])))
+                starts[a] = ready[a]
+                starts[a + 1:b] = seg[1:-1]
+                ends[a:b] = seg[1:]
+        bad = idx[1:][ready[idx[1:]] < ends[idx[1:] - 1]]
+        if not bad.shape[0]:
+            return starts, ends
+        cand[bad] = False
+    raise AssertionError("closed-form chain decomposition did not converge")
+
+
+def _fifo_fast_results(plan: CommPlan, flows: Sequence[FlowSpec]
+                       ) -> Optional[List[FlowResult]]:
+    """Closed-form results for a single-job, unit-capacity fifo plan.
+
+    A serialized fifo plan can never contend — one ``hold`` flow in flight
+    on a dedicated link — so the event loop degenerates to the max-plus
+    recurrence that :func:`_serialized_closed_form` vectorizes.  Dispatch
+    is *checked*, not assumed: every precondition the closed form relies on
+    (hold semantics with precomputed durations, one job, one link, ready
+    times non-decreasing along service order) is verified on the actual
+    flow list, and anything else returns ``None`` to take the engine path.
+    The caller guarantees unit link capacity by constructing the default
+    engine (``run_flows`` with no ``capacities``).
+    """
+    if not plan.serialized_fifo:
+        return None
+    if not flows:
+        return []
+    if len(flows) < _FASTPATH_MIN_OPS:
+        return None     # numpy's fixed costs exceed the calendar's below this
+    job = flows[0].job
+    link = flows[0].link
+    prev_ready = -float("inf")
+    for f in flows:
+        if (not f.hold or f.duration is None or f.job != job
+                or f.link != link or f.ready < prev_ready):
+            return None
+        prev_ready = f.ready
+    ready = np.array([f.ready for f in flows])
+    dur = np.array([f.duration for f in flows])
+    starts, ends = _serialized_closed_form(ready, dur)
+    wire_ends = starts + np.array([f.work for f in flows])
+    new = tuple.__new__
+    return [new(FlowResult, (f.op_id, job, s, w, e, False))
+            for f, s, w, e in zip(flows, starts.tolist(), wire_ends.tolist(),
+                                  ends.tolist())]
+
+
+# below ~2 dozen ops the event calendar is cheaper than numpy dispatch; the
+# closed form pays off on the long serialized plans large sweeps generate
+_FASTPATH_MIN_OPS = 24
+
+
+def _fastpath_enabled() -> bool:
+    return os.environ.get("REPRO_SIM_FASTPATH", "1") != "0"
+
+
 def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 tr: Transport, *, job: str = "job0",
                 results: Optional[Sequence[FlowResult]] = None
                 ) -> Tuple[List[Bucket], float, float]:
     """Map per-op flow results back to per-bucket (start, end) + busy time."""
     if results is None:
-        results = run_flows(plan_to_flows(plan, cost, tr.per_tensor_overhead,
-                                          job=job))
+        flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job)
+        if _fastpath_enabled():
+            results = _fifo_fast_results(plan, flows)
+        if results is None:
+            results = run_flows(flows)
     start = {b: None for b in range(plan.n_buckets)}
     end = {b: 0.0 for b in range(plan.n_buckets)}
     busy = 0.0

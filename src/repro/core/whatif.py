@@ -62,6 +62,13 @@ def _cells(spec) -> Dict[tuple, Dict]:
     return index_cells(run_spec(spec)["cells"])
 
 
+
+def _k(model, servers, bw, transport, ratio=1.0, topo="ring", sched="fifo",
+       n_jobs=1):
+    """An ``index_cells`` key in CELL_AXES order, with trailing-axis
+    defaults — figure builders only name the axes their sweep varies."""
+    return (model, servers, bw, transport, ratio, topo, sched, n_jobs)
+
 def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
                             servers: Optional[Sequence[int]] = None,
                             bandwidth_gbps: Optional[float] = None) -> List[Dict]:
@@ -74,7 +81,7 @@ def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     bw = spec.bandwidth_gbps[0]
     return [dict(model=m, servers=n,
-                 scaling=ix[(m, n, bw, "horovod_tcp", 1.0, "ring", "fifo")]
+                 scaling=ix[_k(m, n, bw, "horovod_tcp")]
                  ["scaling_factor"])
             for m in spec.models for n in spec.n_servers]
 
@@ -92,7 +99,7 @@ def fig3_scaling_vs_bandwidth(model: Optional[str] = None,
     ix = _cells(spec)
     tr = spec.transport[0]
     return [dict(model=spec.models[0], servers=n, bandwidth_gbps=bw,
-                 scaling=ix[(spec.models[0], n, bw, tr, 1.0, "ring", "fifo")]
+                 scaling=ix[_k(spec.models[0], n, bw, tr)]
                  ["scaling_factor"])
             for n in spec.n_servers for bw in spec.bandwidth_gbps]
 
@@ -108,9 +115,9 @@ def fig4_utilization(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     n, tr = spec.n_servers[0], spec.transport[0]
     return [dict(model=m, bandwidth_gbps=bw,
-                 utilization=ix[(m, n, bw, tr, 1.0, "ring", "fifo")]
+                 utilization=ix[_k(m, n, bw, tr)]
                  ["network_utilization"],
-                 effective_gbps=ix[(m, n, bw, tr, 1.0, "ring", "fifo")]
+                 effective_gbps=ix[_k(m, n, bw, tr)]
                  ["effective_gbps"])
             for m in spec.models for bw in spec.bandwidth_gbps]
 
@@ -127,10 +134,8 @@ def fig6_sim_vs_measured(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     n = spec.n_servers[0]
     return [dict(model=m, bandwidth_gbps=bw,
-                 simulated_full_util=ix[(m, n, bw, "ideal",
-                                         1.0, "ring", "fifo")]["scaling_factor"],
-                 measured_mode=ix[(m, n, bw, "horovod_tcp",
-                                   1.0, "ring", "fifo")]["scaling_factor"])
+                 simulated_full_util=ix[_k(m, n, bw, "ideal")]["scaling_factor"],
+                 measured_mode=ix[_k(m, n, bw, "horovod_tcp")]["scaling_factor"])
             for m in spec.models for bw in spec.bandwidth_gbps]
 
 
@@ -145,9 +150,9 @@ def fig7_scaling_vs_workers(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     bw = spec.bandwidth_gbps[0]
     return [dict(model=m, servers=n, gpus=n * GPUS_PER_SERVER,
-                 simulated=ix[(m, n, bw, "ideal", 1.0, "ring", "fifo")]
+                 simulated=ix[_k(m, n, bw, "ideal")]
                  ["scaling_factor"],
-                 measured_mode=ix[(m, n, bw, "horovod_tcp", 1.0, "ring", "fifo")]
+                 measured_mode=ix[_k(m, n, bw, "horovod_tcp")]
                  ["scaling_factor"])
             for m in spec.models for n in spec.n_servers]
 
@@ -167,7 +172,7 @@ def fig8_compression(models: Optional[Sequence[str]] = None,
     ix = _cells(spec)
     n = spec.n_servers[0]
     return [dict(model=m, bandwidth_gbps=bw, ratio=r,
-                 scaling=ix[(m, n, bw, "ideal", r, "ring", "fifo")]["scaling_factor"])
+                 scaling=ix[_k(m, n, bw, "ideal", r)]["scaling_factor"])
             for m in spec.models for bw in spec.bandwidth_gbps
             for r in spec.compression_ratio]
 
@@ -203,8 +208,7 @@ def fig9_other_systems(models: Optional[Sequence[str]] = None,
         for bw in spec.bandwidth_gbps:
             row = dict(model=m, bandwidth_gbps=bw)
             for topo in spec.topology:
-                row[topo] = ix[(m, n, bw, "ideal", 1.0, topo, "fifo")
-                               ]["scaling_factor"]
+                row[topo] = ix[_k(m, n, bw, "ideal", topo=topo)]["scaling_factor"]
             out.append(row)
     return out
 
@@ -233,7 +237,7 @@ def fig10_schedulers(models: Optional[Sequence[str]] = None,
             for bw in spec.bandwidth_gbps:
                 row = dict(model=m, transport=tr, bandwidth_gbps=bw)
                 for s in spec.scheduler:
-                    c = ix[(m, n, bw, tr, 1.0, "ring", s)]
+                    c = ix[_k(m, n, bw, tr, sched=s)]
                     row[s] = c["scaling_factor"]
                     row[f"{s}_overhead_ms"] = c["t_overhead"] * 1e3
                 out.append(row)

@@ -22,7 +22,7 @@ from typing import Dict, List, Optional
 from repro.experiments import artifacts, grids
 from repro.experiments.compare import compare
 from repro.experiments.runner import ENGINE_VERSION, run_suite
-from repro.experiments.spec import CELL_AXES
+from repro.experiments.spec import CELL_AXES, axis_value
 
 
 def _cmd_run(args: argparse.Namespace) -> int:
@@ -77,9 +77,12 @@ def _cmd_report(args: argparse.Namespace) -> int:
         print("  " + ",".join(cols))
         rows = e["cells"] if args.all else e["cells"][:8]
         for c in rows:
+            # axes added after an artifact was written (or elided at their
+            # default) fall back to AXIS_DEFAULTS
+            vals = [axis_value(c, k) for k in cols]
             print("  " + ",".join(
-                f"{c[k]:.6g}" if isinstance(c[k], float) else str(c[k])
-                for k in cols))
+                f"{v:.6g}" if isinstance(v, float) else str(v)
+                for v in vals))
         if not args.all and len(e["cells"]) > 8:
             print(f"  ... ({len(e['cells'])} cells total; --all to list)")
     return 0
@@ -107,8 +110,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="grid or suite name (see `list`)")
     p.add_argument("--out", help="artifact path "
                    "(default artifacts/experiments/<grid>.json)")
-    p.add_argument("--executor", choices=("thread", "process", "serial"),
-                   default="thread")
+    p.add_argument("--executor",
+                   choices=("auto", "thread", "process", "serial"),
+                   default="auto",
+                   help="auto = threads for small grids, a process pool "
+                        "once the grid reaches 64 cells (pure-Python cells "
+                        "are GIL-bound on threads); serial for debugging")
     p.add_argument("--jobs", type=int, default=None,
                    help="max workers for the executor")
     p.set_defaults(fn=_cmd_run)

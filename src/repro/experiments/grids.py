@@ -72,11 +72,41 @@ _register(ExperimentSpec(
     transport=("ideal", "horovod_tcp"),
     scheduler=("fifo", "priority", "chunked")))
 
+# paper-xl (the event-engine rewrite's payoff): the scenario space the
+# follow-up papers show is needed before the interesting conclusions emerge
+# — a dense bandwidth axis, deep chunking, and a multi-job contention axis.
+# Only tractable with the indexed engine + process-pool runner: the xl-sched
+# grid alone lowers to ~10^3 flows per cell at sched_chunks=64.
+
+# Dense bandwidth sweep: every server count x a 14-point bandwidth axis,
+# both transports (fig3/fig6 were 8 and 5 points on one model each).
+_register(ExperimentSpec(
+    name="xl-bandwidth", models=PAPER_MODELS, n_servers=(2, 4, 8),
+    bandwidth_gbps=(1.0, 2.0, 5.0, 7.5, 10.0, 15.0, 20.0, 25.0, 40.0, 50.0,
+                    75.0, 100.0, 200.0, 400.0),
+    transport=("ideal", "horovod_tcp")))
+
+# Deep chunking: the pipelined schedulers at 64 chunks/bucket, where the
+# chunk pipeline saturates and the t_overhead <= fifo claim is sharpest.
+_register(ExperimentSpec(
+    name="xl-sched", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(5.0, 10.0, 25.0, 50.0, 100.0),
+    transport=("ideal", "horovod_tcp"),
+    scheduler=("fifo", "priority", "chunked"), sched_chunks=64))
+
+# Contention: 1/2/4/8 copies of the same training job fair-sharing one
+# link (simulate_contention), under fifo and the chunked pipeline.
+_register(ExperimentSpec(
+    name="xl-contention", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(10.0, 25.0, 100.0), transport=("horovod_tcp",),
+    scheduler=("fifo", "chunked"), n_jobs=(1, 2, 4, 8), sched_chunks=32))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
               "paper-fig7", "paper-fig8", "paper-fig9"),
     "scheduler": ("scheduler-suite",),
+    "paper-xl": ("xl-bandwidth", "xl-sched", "xl-contention"),
 }
 
 

@@ -1,25 +1,48 @@
 """Grid execution: fan an expanded spec out over the what-if simulator.
 
 ``run_spec`` maps every :class:`~repro.experiments.spec.Cell` through
-``repro.core.simulator.simulate`` via ``concurrent.futures`` (threads by
-default — each cell is a few ms of pure Python — or processes for large
-grids) and returns one *experiment record*: spec + spec hash + per-cell
-``SimResult`` fields + paper-claim validations.  Records are plain dicts so
-``artifacts.write`` can dump them untouched.
+``repro.core.simulator.simulate`` (or ``simulate_contention`` when the
+cell's ``n_jobs`` axis is > 1) via ``concurrent.futures`` and returns one
+*experiment record*: spec + spec hash + per-cell ``SimResult`` fields +
+paper-claim validations.  Records are plain dicts so ``artifacts.write``
+can dump them untouched.
+
+Executor selection (``executor="auto"``, the CLI default): grids below
+:data:`PROCESS_THRESHOLD` cells run on threads — each cell is a few ms of
+pure Python, so thread fan-out only hides the artifact I/O — while larger
+grids use a process pool, since the GIL serializes pure-Python cells and
+threads cannot scale them.  ``serial`` stays available for debugging (and
+is what tiny grids degenerate to).
+
+Process pools have two per-worker costs this module amortizes:
+
+- the ``_timeline`` LRU cache is cold in every worker, so each pool worker
+  runs :func:`_warm_timelines` as an initializer, building the timelines
+  the spec names exactly once per process instead of once per cell;
+- cells are submitted in :data:`CELLS_PER_TASK`-sized batches so argument
+  pickling and future bookkeeping are paid per batch, not per cell.
 """
 from __future__ import annotations
 
+import os
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from functools import lru_cache
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.addest import AddEst
-from repro.core.simulator import simulate
+from repro.core.simulator import simulate, simulate_contention
 from repro.core.transport import GBPS
 from repro.configs.base import CommConfig
 from repro.experiments.spec import Cell, ExperimentSpec
 
 ENGINE_VERSION = 1
+
+# auto executor: processes once the grid is big enough that the GIL (not
+# I/O) is the bottleneck; below it, threads keep the artifact write warm
+# without fork/spawn overhead
+PROCESS_THRESHOLD = 64
+# cells per process-pool task: amortizes pickling without starving workers
+CELLS_PER_TASK = 8
 
 _ADDEST = {"v100": AddEst.v100, "tpu_v5e": AddEst.tpu_v5e}
 
@@ -30,22 +53,43 @@ def _timeline(model: str):
     return from_cnn(model)
 
 
+def _warm_timelines(models: Sequence[str]) -> None:
+    """Process-pool initializer: pre-build the timelines a spec sweeps.
+
+    ``_timeline``'s ``lru_cache`` lives per process; without this, every
+    worker would rebuild each model's timeline on its first cell."""
+    for m in models:
+        _timeline(m)
+
+
 def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
     """Simulate one grid cell.  Must match ``whatif.sim_scaling`` exactly:
     same timeline, worker count, AddEst, and CommConfig as the historical
-    per-figure loops, so golden artifacts are comparable at 1e-9."""
-    r = simulate(
-        _timeline(cell.model),
+    per-figure loops, so golden artifacts are comparable at 1e-9.
+
+    A cell with ``n_jobs > 1`` runs :func:`simulate_contention` with
+    ``n_jobs`` copies of the same training job sharing one fair-share link;
+    the jobs are symmetric, so the first job's result is the cell's record.
+    """
+    kwargs = dict(
         n_workers=cell.n_servers * spec.gpus_per_server,
         bandwidth=cell.bandwidth_gbps * GBPS,
         transport=cell.transport,
         compression_ratio=cell.compression_ratio,
-        topology=cell.topology,
         scheduler=cell.scheduler,
         n_chunks=spec.sched_chunks,
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())
+    tl = _timeline(cell.model)
+    if cell.n_jobs > 1:
+        if cell.topology != "ring":
+            raise ValueError(
+                f"contention cells model the flat ring only, got topology "
+                f"{cell.topology!r} with n_jobs={cell.n_jobs}")
+        r = simulate_contention([tl] * cell.n_jobs, **kwargs)[0]
+    else:
+        r = simulate(tl, topology=cell.topology, **kwargs)
     out = cell.to_dict()
     out.update(r.to_dict())
     # effective bandwidth in the sweep's own unit, for readable artifacts
@@ -61,19 +105,43 @@ def _run_cell_from_dicts(spec_d: Dict, cell_d: Dict) -> Dict:
     return run_cell(ExperimentSpec.from_dict(spec_d), Cell.from_dict(cell_d))
 
 
-def run_spec(spec: ExperimentSpec, *, executor: str = "thread",
+def _run_cell_batch(spec_d: Dict, cell_ds: Sequence[Dict]) -> List[Dict]:
+    """Picklable batch entry point: one submission, many cells."""
+    spec = ExperimentSpec.from_dict(spec_d)
+    return [run_cell(spec, Cell.from_dict(d)) for d in cell_ds]
+
+
+def resolve_executor(executor: str, n_cells: int) -> str:
+    """``auto`` -> threads for small grids, processes for big ones."""
+    if executor != "auto":
+        return executor
+    return "process" if n_cells >= PROCESS_THRESHOLD else "thread"
+
+
+def _batches(items: Sequence, size: int) -> List[Sequence]:
+    return [items[i:i + size] for i in range(0, len(items), size)]
+
+
+def run_spec(spec: ExperimentSpec, *, executor: str = "auto",
              max_workers: Optional[int] = None) -> Dict:
     """Expand and run one grid; returns the experiment record."""
     cells = spec.expand()
-    if executor == "serial" or len(cells) <= 1:
+    mode = resolve_executor(executor, len(cells))
+    if mode == "serial" or len(cells) <= 1:
         results = [run_cell(spec, c) for c in cells]
-    elif executor == "process":
+    elif mode == "process":
         spec_d = spec.to_dict()
-        with ProcessPoolExecutor(max_workers=max_workers) as pool:
-            results = list(pool.map(_run_cell_from_dicts,
-                                    [spec_d] * len(cells),
-                                    [c.to_dict() for c in cells]))
-    elif executor == "thread":
+        workers = max_workers or min(len(cells), os.cpu_count() or 1)
+        batches = _batches([c.to_dict() for c in cells], CELLS_PER_TASK)
+        with ProcessPoolExecutor(
+                max_workers=workers,
+                initializer=_warm_timelines,
+                initargs=(tuple(spec.models),)) as pool:
+            results = [r for batch in pool.map(_run_cell_batch,
+                                               [spec_d] * len(batches),
+                                               batches)
+                       for r in batch]
+    elif mode == "thread":
         with ThreadPoolExecutor(max_workers=max_workers) as pool:
             results = list(pool.map(lambda c: run_cell(spec, c), cells))
     else:
@@ -90,7 +158,7 @@ def run_spec(spec: ExperimentSpec, *, executor: str = "thread",
     }
 
 
-def run_suite(specs: Sequence[ExperimentSpec], *, executor: str = "thread",
+def run_suite(specs: Sequence[ExperimentSpec], *, executor: str = "auto",
               max_workers: Optional[int] = None) -> List[Dict]:
     return [run_spec(s, executor=executor, max_workers=max_workers)
             for s in specs]
@@ -98,9 +166,8 @@ def run_suite(specs: Sequence[ExperimentSpec], *, executor: str = "thread",
 
 def index_cells(cells: Sequence[Dict]) -> Dict[tuple, Dict]:
     """Cell list -> {(model, n_servers, bw, transport, ratio, topo,
-    scheduler): cell}.  Axes added after an artifact was written fall back
-    to their recorded defaults, so old artifacts index consistently."""
-    from repro.experiments.spec import AXIS_DEFAULTS, CELL_AXES
-    return {tuple(c.get(a, AXIS_DEFAULTS[a]) if a in AXIS_DEFAULTS else c[a]
-                  for a in CELL_AXES): c
-            for c in cells}
+    scheduler, n_jobs): cell}.  Axes added after an artifact was written
+    fall back to their recorded defaults, so old artifacts index
+    consistently."""
+    from repro.experiments.spec import CELL_AXES, axis_value
+    return {tuple(axis_value(c, a) for a in CELL_AXES): c for c in cells}

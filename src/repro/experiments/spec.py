@@ -21,9 +21,26 @@ SPEC_VERSION = 1
 # append at the end, with a default recorded in AXIS_DEFAULTS so artifacts
 # written before the axis existed still index consistently)
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
-             "compression_ratio", "topology", "scheduler")
+             "compression_ratio", "topology", "scheduler", "n_jobs")
 
-AXIS_DEFAULTS = {"scheduler": "fifo"}
+AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1}
+
+# axes added after the first golden artifacts shipped: omitted from
+# serialized cells/specs while at their default, so pre-axis artifacts stay
+# byte-identical and spec hashes (the CI regression gate) never drift for
+# grids that do not sweep them
+_ELIDED_AT_DEFAULT = {"n_jobs": 1}
+
+
+def axis_value(cell: Dict, axis: str):
+    """Read ``axis`` from a serialized cell, defaulting elided/new axes.
+
+    The one sanctioned way to index recorded cells: axes appended after an
+    artifact was written (or elided at their default) fall back to
+    ``AXIS_DEFAULTS`` instead of raising."""
+    if axis in AXIS_DEFAULTS:
+        return cell.get(axis, AXIS_DEFAULTS[axis])
+    return cell[axis]
 
 
 @dataclass(frozen=True)
@@ -37,12 +54,14 @@ class Cell:
     compression_ratio: float
     topology: str
     scheduler: str = "fifo"
+    n_jobs: int = 1                 # co-located jobs contending for the link
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
 
     def to_dict(self) -> Dict:
-        return {a: getattr(self, a) for a in CELL_AXES}
+        return {a: getattr(self, a) for a in CELL_AXES
+                if _ELIDED_AT_DEFAULT.get(a, ...) != getattr(self, a)}
 
     @staticmethod
     def from_dict(d: Dict) -> "Cell":
@@ -67,6 +86,7 @@ class ExperimentSpec:
     compression_ratio: Tuple[float, ...] = (1.0,)
     topology: Tuple[str, ...] = ("ring",)
     scheduler: Tuple[str, ...] = ("fifo",)
+    n_jobs: Tuple[int, ...] = (1,)      # contention axis (fair-share link)
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
@@ -76,7 +96,7 @@ class ExperimentSpec:
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
         for f in ("models", "n_servers", "bandwidth_gbps", "transport",
-                  "compression_ratio", "topology", "scheduler"):
+                  "compression_ratio", "topology", "scheduler", "n_jobs"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -85,23 +105,28 @@ class ExperimentSpec:
 
     def expand(self) -> Tuple[Cell, ...]:
         """Cartesian product in stable axis order (model outermost)."""
-        return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s)
-                     for m, n, bw, t, r, topo, s in product(
+        return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j))
+                     for m, n, bw, t, r, topo, s, j in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
-                         self.topology, self.scheduler))
+                         self.topology, self.scheduler, self.n_jobs))
 
     @property
     def n_cells(self) -> int:
         return (len(self.models) * len(self.n_servers)
                 * len(self.bandwidth_gbps) * len(self.transport)
                 * len(self.compression_ratio) * len(self.topology)
-                * len(self.scheduler))
+                * len(self.scheduler) * len(self.n_jobs))
 
     # -- serialization -------------------------------------------------------
 
     def to_dict(self) -> Dict:
         d = asdict(self)
+        if self.n_jobs == (1,):
+            # elided while at its default: specs written before the
+            # contention axis existed keep their canonical JSON (and hence
+            # spec hash — the golden-artifact gate) unchanged
+            del d["n_jobs"]
         d["spec_version"] = SPEC_VERSION
         return d
 

@@ -14,7 +14,8 @@ Check = Dict[str, bool]
 
 
 def _by(cells: Sequence[Dict], *axes: str, value: str = "scaling_factor"):
-    return {tuple(c[a] for a in axes): c[value] for c in cells}
+    from repro.experiments.spec import axis_value
+    return {tuple(axis_value(c, a) for a in axes): c[value] for c in cells}
 
 
 def _fig1(cells: Sequence[Dict]) -> Check:
@@ -111,6 +112,68 @@ def _scheduler_suite(cells: Sequence[Dict]) -> Check:
     }
 
 
+def _xl_bandwidth(cells: Sequence[Dict]) -> Check:
+    """The dense sweep must reproduce the paper's shape everywhere: scaling
+    monotone in bandwidth per (model, servers, transport), ideal transport
+    never below measured mode, and the measured plateau past 25 Gbps."""
+    by = _by(cells, "model", "n_servers", "transport", "bandwidth_gbps")
+    bws = sorted({bw for (_, _, _, bw) in by})
+    mono = all(by[(m, n, t, a)] <= by[(m, n, t, b)] + 1e-9
+               for (m, n, t, _) in by for a, b in zip(bws, bws[1:]))
+    ideal_ge = all(f <= by[(m, n, "ideal", bw)] + 1e-9
+                   for (m, n, t, bw), f in by.items() if t == "horovod_tcp")
+    plateau = all(by[(m, n, "horovod_tcp", 400.0)]
+                  - by[(m, n, "horovod_tcp", 25.0)] < 0.15
+                  for (m, n, t, _) in by if t == "horovod_tcp")
+    return {"monotone_in_bandwidth": mono, "ideal_bounds_measured": ideal_ge,
+            "measured_plateau_past_25g": plateau}
+
+
+def _xl_sched(cells: Sequence[Dict]) -> Check:
+    """Deep chunking (64 chunks/bucket) must sharpen, not break, the
+    scheduler claims: pipelined schedules never add overhead over fifo."""
+    over = _by(cells, "model", "bandwidth_gbps", "transport", "scheduler",
+               value="t_overhead")
+    eps = 1e-12
+    fifo = {k[:3]: v for k, v in over.items() if k[3] == "fifo"}
+    pri_ok = all(v <= fifo[k[:3]] + eps
+                 for k, v in over.items() if k[3] == "priority")
+    chk_ok = all(v <= fifo[k[:3]] + eps
+                 for k, v in over.items() if k[3] == "chunked")
+    # at 64 chunks the pipeline must show a strict win on the bandwidth-
+    # bound measured VGG16 cell
+    gain = (over[("vgg16", 5.0, "horovod_tcp", "fifo")]
+            - over[("vgg16", 5.0, "horovod_tcp", "chunked")])
+    return {"priority64_overhead_le_fifo": pri_ok,
+            "chunked64_overhead_le_fifo": chk_ok,
+            "chunked64_helps_vgg16_at_5g": gain > 0.0}
+
+
+def _xl_contention(cells: Sequence[Dict]) -> Check:
+    """Fair-share contention semantics at sweep scale: co-located jobs can
+    only hurt, monotonically in the number of jobs, and a solo 'contention'
+    cell must agree with the plain simulate path bit-for-bit (the engine's
+    closed forms make the degenerate case exact, not just close)."""
+    by = _by(cells, "model", "bandwidth_gbps", "scheduler", "n_jobs")
+    jobs = sorted({j for (_, _, _, j) in by})
+    mono = all(by[(m, bw, s, b)] <= by[(m, bw, s, a)] + 1e-9
+               for (m, bw, s, _) in by for a, b in zip(jobs, jobs[1:]))
+    hurts = all(by[(m, bw, s, 8)] < by[(m, bw, s, 1)] - 1e-6
+                for (m, bw, s, j) in by if j == 1 and bw <= 25.0)
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    solo = [c for c in cells if c.get("n_jobs", 1) == 1
+            and c["model"] == "vgg16" and c["scheduler"] == "fifo"]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"],
+                         scheduler=c["scheduler"]).t_sync == c["t_sync"]
+                for c in solo)
+    return {"monotone_in_n_jobs": mono, "contention_hurts_at_low_bw": hurts,
+            "solo_cell_matches_simulate_bitwise": exact}
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -120,6 +183,9 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig8": _fig8,
     "paper-fig9": _fig9,
     "scheduler-suite": _scheduler_suite,
+    "xl-bandwidth": _xl_bandwidth,
+    "xl-sched": _xl_sched,
+    "xl-contention": _xl_contention,
 }
 
 

@@ -66,7 +66,7 @@ def test_run_cell_matches_whatif_sim_scaling():
     assert got["n_buckets"] == len(want.buckets)
 
 
-@pytest.mark.parametrize("executor", ["serial", "thread"])
+@pytest.mark.parametrize("executor", ["serial", "thread", "process"])
 def test_executors_agree_bitwise(executor):
     spec = ExperimentSpec(name="t", models=("resnet50",), n_servers=(2, 8),
                           bandwidth_gbps=(10.0, 100.0))
@@ -74,6 +74,71 @@ def test_executors_agree_bitwise(executor):
     other = run_spec(spec, executor=executor)
     assert serial["cells"] == other["cells"]
     assert serial["spec_hash"] == other["spec_hash"]
+
+
+def test_auto_executor_resolution():
+    from repro.experiments.runner import PROCESS_THRESHOLD, resolve_executor
+    assert resolve_executor("auto", PROCESS_THRESHOLD - 1) == "thread"
+    assert resolve_executor("auto", PROCESS_THRESHOLD) == "process"
+    # explicit choices pass through untouched (serial stays debuggable)
+    for mode in ("serial", "thread", "process"):
+        assert resolve_executor(mode, 10_000) == mode
+
+
+def test_contention_axis_runs_and_matches_simulate_contention():
+    from repro.core.simulator import simulate_contention
+    from repro.core.timeline import from_cnn
+
+    spec = ExperimentSpec(name="t", models=("resnet50",), n_servers=(2,),
+                          bandwidth_gbps=(10.0,), n_jobs=(1, 4))
+    rec = run_spec(spec, executor="serial")
+    by_jobs = {c.get("n_jobs", 1): c for c in rec["cells"]}
+    assert set(by_jobs) == {1, 4}
+    # contention can only hurt
+    assert by_jobs[4]["scaling_factor"] < by_jobs[1]["scaling_factor"]
+    # and the cell must be exactly simulate_contention's first job
+    want = simulate_contention([from_cnn("resnet50")] * 4, n_workers=16,
+                               bandwidth=10.0 * GBPS)[0]
+    assert by_jobs[4]["t_sync"] == want.t_sync
+    assert by_jobs[4]["scaling_factor"] == want.scaling_factor
+
+
+def test_contention_cell_rejects_non_ring_topology():
+    from repro.experiments.runner import run_cell
+    spec = ExperimentSpec(name="t")
+    cell = Cell("resnet50", 2, 10.0, "ideal", 1.0, "switchml", "fifo", 4)
+    with pytest.raises(ValueError, match="ring"):
+        run_cell(spec, cell)
+
+
+def test_n_jobs_axis_elided_at_default():
+    """The contention axis must not disturb the seed schema: cells and
+    specs omit it at its default, so spec hashes (the golden-artifact CI
+    gate) and artifact bytes are unchanged for grids that don't sweep it."""
+    solo = Cell("resnet50", 2, 10.0, "ideal", 1.0, "ring")
+    assert "n_jobs" not in solo.to_dict()
+    assert Cell.from_dict(solo.to_dict()) == solo
+    multi = Cell("resnet50", 2, 10.0, "ideal", 1.0, "ring", "fifo", 4)
+    assert multi.to_dict()["n_jobs"] == 4
+    assert Cell.from_dict(multi.to_dict()) == multi
+
+    plain = ExperimentSpec(name="t")
+    assert "n_jobs" not in plain.to_dict()
+    swept = ExperimentSpec(name="t", n_jobs=(1, 2))
+    assert swept.to_dict()["n_jobs"] == (1, 2)
+    assert swept.spec_hash() != plain.spec_hash()
+    assert ExperimentSpec.from_dict(plain.to_dict()) == plain
+    assert ExperimentSpec.from_dict(swept.to_dict()) == swept
+
+
+def test_paper_xl_suite_resolves_and_validates():
+    specs = grids.resolve("paper-xl")
+    assert [s.name for s in specs] == ["xl-bandwidth", "xl-sched",
+                                      "xl-contention"]
+    assert sum(s.n_cells for s in specs) >= 256
+    from repro.experiments.validations import VALIDATORS
+    for s in specs:
+        assert s.name in VALIDATORS, f"xl grid {s.name} must carry checks"
 
 
 def test_validations_recorded_for_paper_grids():
