@@ -12,7 +12,11 @@ Measures three things and writes them to ``BENCH_sweep.json``:
   (``tests/_reference_engine.py``);
 - **fastpath_speedup** — the closed-form fifo path in
   ``repro.core.simulator`` against the event engine on a long serialized
-  plan.
+  plan;
+- **small_plan_us** — one engine call on a paper-sized (two-dozen-flow)
+  plan, the regime where per-run setup cost dominates: this is what the
+  plain-list small-plan setup in ``repro.core.events`` optimizes, and what
+  every sub-fastpath-threshold cell of a sweep pays per call.
 
 Usage::
 
@@ -203,12 +207,40 @@ def bench_fastpath(reps: int) -> Dict[str, float]:
     }
 
 
+def bench_small_plan(reps: int) -> Dict[str, float]:
+    from repro.configs.base import CommConfig
+    from repro.core.addest import AddEst
+    from repro.core.events import run_flows
+    from repro.core.network_model import RingAllReduce
+    from repro.core.schedule import lower_buckets, plan_to_flows
+    from repro.core.simulator import fuse_buckets
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS, get_transport
+
+    # a real paper cell's plan: vgg16 fifo at the default fusion buffer is
+    # ~18 ops — below the simulator's closed-form threshold, so sweeps pay
+    # one engine call (and its setup) for every such cell
+    tl = from_cnn("vgg16")
+    tr = get_transport("horovod_tcp")
+    cost = RingAllReduce(64, tr.effective(100 * GBPS), AddEst.v100())
+    plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
+                          for b in fuse_buckets(tl, CommConfig())],
+                         scheduler="fifo")
+    flows = plan_to_flows(plan, cost, tr.per_tensor_overhead)
+    t = _best(lambda: run_flows(flows), reps + 1)
+    return {
+        "small_plan_flows": float(len(flows)),
+        "small_plan_us": t * 1e6,
+    }
+
+
 def run_bench(quick: bool) -> Dict:
     reps = 1 if quick else 3
     metrics: Dict[str, float] = {}
     metrics.update(bench_sweep(reps))
     metrics.update(bench_engine(reps))
     metrics.update(bench_fastpath(reps))
+    metrics.update(bench_small_plan(reps))
     return {
         "kind": KIND,
         "schema_version": SCHEMA_VERSION,
@@ -276,6 +308,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"fastpath: {m['fastpath_plan_ops']:.0f}-op fifo plan: engine "
           f"{m['engine_fifo_ms']:.2f} ms -> closed form "
           f"{m['fastpath_ms']:.2f} ms ({m['fastpath_speedup']:.1f}x)")
+    print(f"small:   {m['small_plan_flows']:.0f}-flow paper plan: "
+          f"{m['small_plan_us']:.1f} us/engine call")
 
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)

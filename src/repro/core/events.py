@@ -62,11 +62,32 @@ of flows.  This version is indexed end to end:
   stretches are computed with vectorized numpy cumulative sums and
   committed in one pass, up to the first membership-changing boundary
   (ready gate, ``hold`` flow, job exhaustion, or calendar interrupt).
+- **small-plan setup**: the columnar numpy views that pay for themselves on
+  thousand-flow plans cost more than the whole event loop on the two-dozen-
+  op plans the paper grids generate, so below
+  :data:`_SMALL_PLAN_MAX_FLOWS` the setup runs on plain lists and the bulk
+  commit (which needs the arrays, and can never engage on single-job plans
+  anyway) is skipped.  The scalar event loop is identical either way, so
+  single-job results are bit-identical across the two setups.
 
 Termination is progress-based: the engine raises only when the calendar
 drains with flows outstanding, or when event processing stops advancing
 time, admitting, or completing — not on an iteration-count heuristic, which
 could false-trip on heavily contended multi-job plans.
+
+Multi-rail links
+----------------
+
+A physical NIC with ``r`` rails is ``r`` independent fluid links that
+happen to share a name: ``NetworkEngine(rails={"nic": r})`` turns the named
+link into a :class:`_LinkSet` of ``r`` per-rail service clocks, and each
+flow's ``rail`` field selects which clock serves it (rail selection is part
+of the *plan* — see :func:`repro.core.schedule.assign_rails` — so the
+engine stays deterministic and a one-rail plan is bit-exact with a plain
+link).  Rails do not fair-share with each other: contention is per rail,
+which is exactly what distinguishes a 2x50G multi-rail host from a single
+100G NIC.  The caller models per-rail bandwidth by scaling ``work`` (see
+``plan_to_flows(..., n_rails=...)``).
 """
 from __future__ import annotations
 
@@ -85,10 +106,29 @@ _INF = float("inf")
 class FlowSpec(NamedTuple):
     """One wire transfer plus a fixed post-wire latency.
 
-    ``priority`` orders admission within a job (smaller first; ties broken
-    by ``op_id``).  ``duration``, when given, must equal ``work + latency``
-    up to the caller's own float rounding — it is used verbatim for the
-    closed-form uncontended completion of ``hold`` flows.
+    The engine's unit of work: the schedule layer lowers every
+    :class:`~repro.core.schedule.CommOp` to exactly one ``FlowSpec``.
+
+    - ``op_id`` identifies the flow in results (results come back in input
+      order, but ``op_id`` survives any caller-side regrouping);
+    - ``ready`` is the earliest admission time (the bucket's flush time,
+      possibly perturbed by :func:`perturb_flows`);
+    - ``work`` is wire seconds *at full link rate* — the caller bakes
+      bandwidth into it via the cost model, so a rail at 1/n of the
+      aggregate bandwidth simply carries ``n`` times the work;
+    - ``latency`` is the fixed post-wire phase (vector adds + negotiation)
+      that does not scale under link sharing;
+    - ``priority`` orders admission within a job (smaller first; ties broken
+      by ``op_id``);
+    - ``job`` names the serialization resource (one wire in flight per job);
+    - ``link``/``rail`` name the bandwidth resource: ``rail`` selects the
+      per-rail service clock when the engine was built with
+      ``rails={link: n}``, and is ignored (must be 0) otherwise;
+    - ``hold`` keeps the job busy through the latency (Horovod's serialized
+      all-reduce); ``duration``, when given, must equal ``work + latency``
+      up to the caller's own float rounding — it is used verbatim for the
+      closed-form uncontended completion of ``hold`` flows, which is what
+      makes the fifo schedule bit-exact with the legacy serialized loop.
     """
 
     op_id: int
@@ -100,9 +140,19 @@ class FlowSpec(NamedTuple):
     link: str = DEFAULT_LINK
     hold: bool = False               # job held busy through the latency
     duration: Optional[float] = None  # precomputed work+latency (hold flows)
+    rail: int = 0                    # which rail of a multi-rail link
 
 
 class FlowResult(NamedTuple):
+    """Execution record of one flow, in the input list's order.
+
+    ``start`` is the admission time (wire begins), ``wire_end`` when the
+    link was released, ``end`` when the post-wire latency finished.
+    ``contended`` is True only if the wire phase shared its link (or rail)
+    for a *nonzero* duration — uncontended flows take exact closed forms,
+    so ``start + work == wire_end`` bit-for-bit.
+    """
+
     op_id: int
     job: str
     start: float                     # admission (wire begins)
@@ -114,6 +164,34 @@ class FlowResult(NamedTuple):
     def occupancy(self) -> float:
         """Time this flow kept its serialization resource busy."""
         return self.end - self.start
+
+
+def perturb_flows(flows: Sequence[FlowSpec], jitter: float, seed: int,
+                  stream: int = 0) -> List[FlowSpec]:
+    """Seeded straggler model: delay every flow's ``ready`` time.
+
+    Each flow's flush is pushed back by an independent exponential draw
+    with mean ``jitter`` seconds — the long-tailed per-flow perturbation
+    that models slow workers, GC pauses, and negotiation stalls jittering
+    bucket flush times.  Determinism contract:
+
+    - the draws depend only on ``(seed, stream, len(flows))`` — never on
+      process, thread, or global RNG state — so artifacts are bit-identical
+      across executors (``stream`` separates jobs in a contention scenario
+      so co-located jobs straggle independently);
+    - with a fixed seed the delays scale *linearly* in ``jitter``
+      (``jitter * standard_exponential``), so a swept jitter axis moves
+      every ready time monotonically — the straggler grid's
+      ``t_sync`` monotonicity validator rests on this;
+    - ``jitter <= 0`` returns the flows unchanged (same objects), keeping
+      the zero-jitter path bit-exact with a run that never heard of jitter.
+    """
+    if jitter <= 0.0 or not flows:
+        return list(flows)
+    rng = np.random.default_rng(
+        np.random.SeedSequence(entropy=int(seed), spawn_key=(int(stream),)))
+    delays = (jitter * rng.standard_exponential(len(flows))).tolist()
+    return [f._replace(ready=f.ready + d) for f, d in zip(flows, delays)]
 
 
 class _Link:
@@ -139,6 +217,22 @@ class _Link:
         self.all_contended = False
 
 
+class _LinkSet:
+    """One named multi-rail link: ``n_rails`` independent per-rail clocks.
+
+    Every rail is a full :class:`_Link` (its own fluid service clock,
+    completion heap, and membership version); flows are routed to
+    ``rails[flow.rail]`` at setup, after which the event loop sees only
+    plain links.  Rails therefore never fair-share with each other — the
+    defining property of a multi-rail NIC versus one fat link.
+    """
+
+    __slots__ = ("rails",)
+
+    def __init__(self, cap: float, n_rails: int):
+        self.rails = [_Link(cap) for _ in range(n_rails)]
+
+
 class _Job:
     """Serialization resource: one wire in flight, priority admission."""
 
@@ -158,15 +252,28 @@ class _Job:
         self.onp = self.wk = self.rd = self.hd = self.lt = None
 
 
+# below this many flows the engine skips its columnar numpy setup (and the
+# bulk-commit path that needs it): asarray/lexsort/zeros dominate the whole
+# event loop on the two-dozen-op plans the paper grids generate, while the
+# bulk path only ever engages on contended multi-job plans far above this
+_SMALL_PLAN_MAX_FLOWS = 64
+
+
 class NetworkEngine:
     """Event-calendar executor for a set of flows over shared links.
 
     ``capacities`` maps link name -> number of flows that can run at full
     rate before fair sharing kicks in (default 1.0 — the whole link).
+    ``rails`` maps link name -> rail count: a name with ``n > 1`` becomes a
+    :class:`_LinkSet` of ``n`` independent per-rail service clocks and each
+    flow's ``rail`` field selects its clock (modulo ``n``).  Links absent
+    from ``rails`` (or mapped to 1) behave exactly as before, bit-for-bit.
     """
 
-    def __init__(self, capacities: Optional[Dict[str, float]] = None):
+    def __init__(self, capacities: Optional[Dict[str, float]] = None,
+                 rails: Optional[Dict[str, int]] = None):
         self.capacities = dict(capacities or {})
+        self.rails = dict(rails or {})
 
     def run(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
         """Execute ``flows``; returns results in input order."""
@@ -174,15 +281,26 @@ class NetworkEngine:
         if not n_total:
             return []
         caps = self.capacities
+        small = n_total < _SMALL_PLAN_MAX_FLOWS
 
         # -- setup: columnar views, grouping, service order, mode -----------
         (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
-         _du_col) = zip(*flows)
+         _du_col, rl_col) = zip(*flows)
 
-        links: Dict[str, _Link] = {
-            name: _Link(caps.get(name, 1.0)) for name in set(lk_col)}
-        link_of = list(map(links.__getitem__, lk_col))
-        one_link = len(links) == 1
+        rail_counts = self.rails
+        if rail_counts and any(rail_counts.get(nm, 1) > 1
+                               for nm in set(lk_col)):
+            sets = {nm: _LinkSet(caps.get(nm, 1.0),
+                                 max(rail_counts.get(nm, 1), 1))
+                    for nm in set(lk_col)}
+            link_of = [sets[nm].rails[r % len(sets[nm].rails)]
+                       for nm, r in zip(lk_col, rl_col)]
+            one_link = sum(len(s.rails) for s in sets.values()) == 1
+        else:
+            links: Dict[str, _Link] = {
+                nm: _Link(caps.get(nm, 1.0)) for nm in set(lk_col)}
+            link_of = list(map(links.__getitem__, lk_col))
+            one_link = len(links) == 1
 
         by_job: Dict[str, List[int]] = {}
         for i, name in enumerate(job_col):
@@ -193,28 +311,39 @@ class NetworkEngine:
         jobs: Dict[str, _Job] = {name: _Job() for name in by_job}
         job_of = list(map(jobs.__getitem__, job_col))
 
-        pr_np = np.asarray(pr_col)
-        op_np = np.asarray(op_col)
-        rd_np = np.asarray(rdy_col)
+        if small:
+            pr_np = op_np = rd_np = None
+        else:
+            pr_np = np.asarray(pr_col)
+            op_np = np.asarray(op_col)
+            rd_np = np.asarray(rdy_col)
         g_wk = g_hd = g_lt = None           # global columns (lazy, for bulk)
 
         cal: List = []              # (time, kind, seq, ...) event calendar
         seq = 0
         for name, idxs in by_job.items():
             jb = jobs[name]
-            ix = np.asarray(idxs, dtype=np.intp)
-            if ix.shape[0] > 1:
-                ix = ix[np.lexsort((op_np[ix], pr_np[ix]))]
-            order = jb.order = ix.tolist()
-            rd_ix = rd_np[ix]
-            rdy = jb.rdy = rd_ix.tolist()
-            if one_link:
-                jb.link = link_of[order[0]]
+            if small:
+                # plain-list service order: identical (priority, op_id)
+                # total order, without paying numpy's fixed costs
+                if len(idxs) > 1:
+                    idxs.sort(key=lambda i: (pr_col[i], op_col[i]))
+                order = jb.order = idxs
+                rdy = jb.rdy = [rdy_col[i] for i in order]
+                monotone = all(a <= b for a, b in zip(rdy, rdy[1:]))
             else:
-                first = link_of[order[0]]
-                jb.link = first if all(link_of[i] is first
-                                       for i in order) else None
-            if len(rdy) == 1 or bool((rd_ix[1:] >= rd_ix[:-1]).all()):
+                ix = np.asarray(idxs, dtype=np.intp)
+                if ix.shape[0] > 1:
+                    ix = ix[np.lexsort((op_np[ix], pr_np[ix]))]
+                order = jb.order = ix.tolist()
+                rd_ix = rd_np[ix]
+                rdy = jb.rdy = rd_ix.tolist()
+                monotone = (len(rdy) == 1
+                            or bool((rd_ix[1:] >= rd_ix[:-1]).all()))
+            first = link_of[order[0]]
+            jb.link = first if one_link or all(link_of[i] is first
+                                               for i in order) else None
+            if monotone:
                 trigger = rdy[0]
             else:
                 # ready times regress along service order (e.g. priority
@@ -227,10 +356,16 @@ class NetworkEngine:
             seq += 1
             heappush(cal, (trigger if trigger > 0.0 else 0.0, _ADMIT, seq, jb))
 
-        start = np.zeros(n_total)
-        wire = np.zeros(n_total)
-        end = np.zeros(n_total)
-        contended = np.zeros(n_total, dtype=bool)
+        if small:
+            start: List[float] = [0.0] * n_total
+            wire: List[float] = [0.0] * n_total
+            end: List[float] = [0.0] * n_total
+            contended: List[bool] = [False] * n_total
+        else:
+            start = np.zeros(n_total)
+            wire = np.zeros(n_total)
+            end = np.zeros(n_total)
+            contended = np.zeros(n_total, dtype=bool)
         n_done = 0
         stale = 0                   # consecutive no-progress calendar pops
         flws = flows                # local alias for the hot loops
@@ -465,7 +600,7 @@ class NetworkEngine:
                                        seq, readmitted.version, readmitted))
                     if not L.n:
                         break
-                    if L.n > 1 and _try_bulk(L, t):
+                    if not small and L.n > 1 and _try_bulk(L, t):
                         t = L.t_last
                         if not L.n:
                             break
@@ -519,14 +654,21 @@ class NetworkEngine:
                 heappush(cal, (proj if proj > t else t, _DONE, seq,
                                admitted.version, admitted))
 
+        if small:
+            rows = zip(op_col, job_col, start, wire, end, contended)
+        else:
+            rows = zip(op_col, job_col, start.tolist(), wire.tolist(),
+                       end.tolist(), contended.tolist())
         new = tuple.__new__
-        return [new(FlowResult, row) for row in
-                zip(op_col, job_col, start.tolist(), wire.tolist(),
-                    end.tolist(), contended.tolist())]
+        return [new(FlowResult, row) for row in rows]
 
 
 def run_flows(flows: Sequence[FlowSpec],
-              capacities: Optional[Dict[str, float]] = None
-              ) -> List[FlowResult]:
-    """Convenience wrapper: execute ``flows`` on a fresh engine."""
-    return NetworkEngine(capacities).run(flows)
+              capacities: Optional[Dict[str, float]] = None,
+              rails: Optional[Dict[str, int]] = None) -> List[FlowResult]:
+    """Convenience wrapper: execute ``flows`` on a fresh engine.
+
+    ``capacities`` and ``rails`` are per-link-name maps — see
+    :class:`NetworkEngine`.
+    """
+    return NetworkEngine(capacities, rails).run(flows)

@@ -24,10 +24,25 @@ Schedulers:
 - ``chunked``            (alias ``chunked-pipelined``) k chunks per bucket in
                          flush order, transmission pipelined with reduction
                          — Sun et al.'s fused+pipelined all-reduce.
+
+Rail assignment (multi-NIC hosts) is a separate pass over a finished plan:
+:func:`assign_rails` maps each op's ``channel`` onto one of ``n_rails``
+rails under a named policy, and :func:`plan_to_flows` lowers channels onto
+the engine's per-rail links (``n_rails`` scales each flow's wire work to
+the per-rail share of the aggregate bandwidth).  Keeping assignment out of
+the schedulers means every scheduler composes with every rail policy, and
+an ``n_rails=1`` plan is the *same object* — bit-exact with a run that
+never heard of rails.
+
+Exactness contract: ``fifo`` lowered with ``n_rails=1`` onto an
+uncontended link reproduces the legacy serialized loop bit-for-bit (the
+``duration`` passed to the engine is the legacy loop's exact float
+expression); all schedulers conserve bytes exactly per bucket, and
+:func:`assign_rails` permutes nothing — it only stamps channels.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Sequence, Tuple
 
 from repro.core.events import FlowSpec
@@ -37,7 +52,15 @@ DEFAULT_CHUNKS = 4
 
 @dataclass(frozen=True)
 class CommOp:
-    """One collective (or one chunk of one) over a bucket's bytes."""
+    """One collective (or one chunk of one) over a bucket's bytes.
+
+    ``op_id`` equals the op's position in the plan by construction, and is
+    stable under rail assignment.  ``priority`` orders service within the
+    plan's job (smaller first, ties by ``op_id``); ``ready`` is the
+    bucket's flush time.  ``channel`` is the rail the op transmits on —
+    0 (the only rail) until :func:`assign_rails` stamps a multi-rail
+    assignment.
+    """
 
     op_id: int
     bucket_id: int
@@ -47,12 +70,19 @@ class CommOp:
     n_tensors: int                  # tensors whose negotiation cost this op carries
     ready: float                    # earliest start (the bucket's flush time)
     priority: float                 # smaller = served first
-    channel: int = 0                # link id (multi-job / multi-rail)
+    channel: int = 0                # rail id (stamped by assign_rails)
 
 
 @dataclass(frozen=True)
 class CommPlan:
-    """An executable communication schedule for one sync."""
+    """An executable communication schedule for one sync.
+
+    Produced by a registered scheduler from flushed buckets
+    (:func:`lower_buckets`); executed by the analytic layer via
+    :func:`plan_to_flows` + the event engine, and by the runtime via
+    :meth:`bucket_order`.  Plans are immutable: passes like
+    :func:`assign_rails` return a new plan.
+    """
 
     scheduler: str
     ops: Tuple[CommOp, ...]
@@ -178,12 +208,57 @@ def lower_buckets(buckets: Sequence[BucketLike], *, scheduler: str = "fifo",
 
 
 # ---------------------------------------------------------------------------
+# rail assignment: CommPlan -> CommPlan with channels stamped
+# ---------------------------------------------------------------------------
+
+RAIL_POLICIES = ("round-robin", "size-balanced")
+
+
+def assign_rails(plan: CommPlan, n_rails: int,
+                 policy: str = "round-robin") -> CommPlan:
+    """Stamp each op's ``channel`` with one of ``n_rails`` rails.
+
+    Policies:
+
+    - ``round-robin``    op ``i`` transmits on rail ``i % n_rails``.  Over a
+      chunked plan this *stripes* every bucket across all rails (chunks of
+      one bucket alternate rails), which is how NCCL-style multi-channel
+      collectives aggregate NICs; over a fifo plan it deals whole buckets
+      out to rails — a serialized stream cannot stripe, which is precisely
+      the multirail grid's finding.
+    - ``size-balanced``  greedy: each op (in op order) goes to the rail
+      with the least accumulated bytes, ties to the lowest rail index.
+      Better when op sizes are skewed (e.g. a small tail bucket).
+
+    ``n_rails <= 1`` returns ``plan`` itself (the same object): a one-rail
+    run is bit-exact with a run that never heard of rails.  Assignment
+    never reorders, splits, or resizes ops — only ``channel`` changes.
+    """
+    if n_rails <= 1:
+        return plan
+    if policy not in RAIL_POLICIES:
+        raise KeyError(f"unknown rail policy {policy!r}; "
+                       f"known: {', '.join(RAIL_POLICIES)}")
+    if policy == "round-robin":
+        chans = [i % n_rails for i in range(len(plan.ops))]
+    else:
+        load = [0.0] * n_rails
+        chans = []
+        for op in plan.ops:
+            r = min(range(n_rails), key=load.__getitem__)
+            chans.append(r)
+            load[r] += op.size
+    ops = tuple(replace(op, channel=c) for op, c in zip(plan.ops, chans))
+    return replace(plan, ops=ops)
+
+
+# ---------------------------------------------------------------------------
 # lowering a plan onto the event engine
 # ---------------------------------------------------------------------------
 
 def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
                   job: str = "job0", link: str = "nic",
-                  op_id_base: int = 0) -> List[FlowSpec]:
+                  op_id_base: int = 0, n_rails: int = 1) -> List[FlowSpec]:
     """CommOps -> engine flows under a cost model.
 
     ``cost`` is any all-reduce cost model from :mod:`repro.core.network_model`
@@ -193,16 +268,38 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
     fixed latency.  ``fifo`` flows hold the job through the latency and
     carry the legacy loop's exact duration expression, so an uncontended
     fifo schedule is bit-identical with the pre-engine serialized loop.
+
+    ``n_rails > 1`` lowers each op's ``channel`` (stamped by
+    :func:`assign_rails`) onto a rail of an aggregate-bandwidth link: the
+    cost model still prices wire time at the *aggregate* bandwidth, so each
+    rail serves ``1/n_rails`` of it and the flow's wire work scales by
+    ``n_rails``; each rail also gets its own serialization lane
+    (``job@r<k>``) — a NIC's rails have independent DMA engines, so one
+    job's flows on different rails overlap.  Run the result with
+    ``run_flows(flows, rails={link: n_rails})``.
     """
     hold = plan.scheduler == "fifo"
     wire_time = getattr(cost, "wire_time", cost.time)
     flows: List[FlowSpec] = []
+    if n_rails <= 1:
+        for op in plan.ops:
+            total = cost.time(op.size) + per_tensor_overhead * op.n_tensors
+            wire = min(wire_time(op.size), total)
+            flows.append(FlowSpec(
+                op_id=op_id_base + op.op_id, ready=op.ready, work=wire,
+                latency=max(0.0, total - wire), priority=op.priority,
+                job=job, link=f"{link}{op.channel}" if op.channel else link,
+                hold=hold, duration=total))
+        return flows
     for op in plan.ops:
         total = cost.time(op.size) + per_tensor_overhead * op.n_tensors
         wire = min(wire_time(op.size), total)
+        lat = max(0.0, total - wire)
+        rail_work = wire * n_rails           # per-rail bw = aggregate / n
         flows.append(FlowSpec(
-            op_id=op_id_base + op.op_id, ready=op.ready, work=wire,
-            latency=max(0.0, total - wire), priority=op.priority,
-            job=job, link=f"{link}{op.channel}" if op.channel else link,
-            hold=hold, duration=total))
+            op_id=op_id_base + op.op_id, ready=op.ready, work=rail_work,
+            latency=lat, priority=op.priority,
+            job=job if op.channel == 0 else f"{job}@r{op.channel}",
+            link=link, hold=hold, duration=lat + rail_work,
+            rail=op.channel))
     return flows

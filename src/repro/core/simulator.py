@@ -21,6 +21,19 @@ wire part that scales under link sharing plus a fixed reduction latency),
 so multi-job contention — two timelines on one link — is expressible via
 :func:`simulate_contention`.
 
+Two scenario axes the paper's testbed could not sweep ride on the same
+lowering:
+
+- ``n_rails`` splits the link into that many rails at ``1/n_rails`` of the
+  aggregate bandwidth each (:func:`~repro.core.schedule.assign_rails`
+  stamps ops onto rails; the engine runs one fluid clock per rail), so a
+  2x50G multi-rail host and a single 100G NIC are different cells at equal
+  aggregate bandwidth;
+- ``jitter`` perturbs every flow's flush time by a seeded exponential draw
+  (:func:`~repro.core.events.perturb_flows`) — the straggler axis.  Both
+  default off and the default path is bit-exact with a build that never
+  had them.
+
 Outputs: t_sync, t_overhead = max(0, t_sync - t_back), and
 f_sim = t_batch / (t_batch + t_overhead)   (paper Eq. in §3.1).
 """
@@ -34,9 +47,10 @@ import numpy as np
 
 from repro.configs.base import CommConfig
 from repro.core.addest import AddEst
-from repro.core.events import FlowResult, FlowSpec, run_flows
+from repro.core.events import (DEFAULT_LINK, FlowResult, FlowSpec,
+                               perturb_flows, run_flows)
 from repro.core.network_model import RingAllReduce, make_cost_model
-from repro.core.schedule import (CommPlan, canonical_scheduler,
+from repro.core.schedule import (CommPlan, assign_rails, canonical_scheduler,
                                  lower_buckets, plan_to_flows)
 from repro.core.timeline import GradTimeline
 from repro.core.transport import Transport, get_transport
@@ -243,15 +257,28 @@ def _fastpath_enabled() -> bool:
 
 def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 tr: Transport, *, job: str = "job0",
-                results: Optional[Sequence[FlowResult]] = None
-                ) -> Tuple[List[Bucket], float, float]:
-    """Map per-op flow results back to per-bucket (start, end) + busy time."""
+                results: Optional[Sequence[FlowResult]] = None,
+                n_rails: int = 1, jitter: float = 0.0, jitter_seed: int = 0,
+                stream: int = 0) -> Tuple[List[Bucket], float, float]:
+    """Map per-op flow results back to per-bucket (start, end) + busy time.
+
+    ``plan`` must already carry its rail assignment (channels); ``n_rails``
+    only sizes the per-rail links.  ``jitter``/``jitter_seed``/``stream``
+    perturb flow ready times via :func:`~repro.core.events.perturb_flows`
+    — the fifo fast path stays dispatch-checked on the *perturbed* flows,
+    so it still applies whenever the jittered ready order happens to stay
+    monotone, and falls back to the engine otherwise.
+    """
     if results is None:
-        flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job)
+        flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job,
+                              n_rails=n_rails)
+        if jitter > 0.0:
+            flows = perturb_flows(flows, jitter, jitter_seed, stream)
         if _fastpath_enabled():
             results = _fifo_fast_results(plan, flows)
         if results is None:
-            results = run_flows(flows)
+            results = run_flows(flows, rails={DEFAULT_LINK: n_rails}
+                                if n_rails > 1 else None)
     start = {b: None for b in range(plan.n_buckets)}
     end = {b: 0.0 for b in range(plan.n_buckets)}
     busy = 0.0
@@ -276,13 +303,22 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
              topology: str = "ring", n_pods: int = 1,
              dcn_bandwidth: Optional[float] = None,
              scheduler: Optional[str] = None,
-             n_chunks: Optional[int] = None) -> SimResult:
+             n_chunks: Optional[int] = None,
+             n_rails: int = 1, rail_policy: str = "round-robin",
+             jitter: float = 0.0, jitter_seed: int = 0) -> SimResult:
     """Run the two-process simulation for one iteration.
 
     ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
     bandwidth (the paper's measured-vs-ideal axis).  ``scheduler`` selects
     the comm schedule (default: ``comm.scheduler``, i.e. ``fifo``);
     ``n_chunks`` the chunking granularity of the pipelined schedulers.
+
+    ``n_rails`` splits ``bandwidth`` (the *aggregate*) into that many
+    equal rails and spreads the plan's ops across them under
+    ``rail_policy`` (see :func:`~repro.core.schedule.assign_rails`);
+    ``jitter`` (seconds, mean of the per-flow exponential delay) with
+    ``jitter_seed`` turns on the straggler axis.  Both at their defaults
+    reproduce today's results bit-for-bit.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -290,6 +326,7 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     eff_bw = tr.effective(bandwidth)
     sched = canonical_scheduler(scheduler or comm.scheduler)
     k = n_chunks if n_chunks is not None else comm.sched_chunks
+    n_rails = max(int(n_rails), 1)      # 0 and 1 both mean "no rails"
 
     cost = make_cost_model(n_workers, eff_bw, addest, topology=topology,
                            n_pods=n_pods,
@@ -299,7 +336,10 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     buckets = fuse_buckets(timeline, comm)
     plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
                           for b in buckets], scheduler=sched, n_chunks=k)
-    served, t_sync, busy = _serve_plan(plan, buckets, cost, tr)
+    plan = assign_rails(plan, n_rails, rail_policy)
+    served, t_sync, busy = _serve_plan(plan, buckets, cost, tr,
+                                       n_rails=n_rails, jitter=jitter,
+                                       jitter_seed=jitter_seed)
 
     if not served:
         t_sync = timeline.t_back
@@ -310,8 +350,10 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     # hierarchical counts the ICI stage, ring the 2S(N-1)/N ring traffic)
     wire = sum(cost.wire_bytes(b.size) for b in served)
     # utilization while the communication process occupies the link (paper
-    # Fig. 4 measures real-time NIC throughput during the comm phase)
-    util = (wire / busy) / bandwidth if busy > 0 else 0.0
+    # Fig. 4 measures real-time NIC throughput during the comm phase);
+    # with rails, ``busy`` sums per-lane occupancy, so the denominator is
+    # the per-rail share of the aggregate bandwidth
+    util = (wire / busy) / (bandwidth / n_rails) if busy > 0 else 0.0
 
     return SimResult(
         name=timeline.name, n_workers=n_workers, bandwidth=bandwidth,
@@ -327,7 +369,10 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                         addest: Optional[AddEst] = None,
                         compression_ratio: float = 1.0,
                         scheduler: Optional[str] = None,
-                        n_chunks: Optional[int] = None) -> List[SimResult]:
+                        n_chunks: Optional[int] = None,
+                        n_rails: int = 1, rail_policy: str = "round-robin",
+                        jitter: float = 0.0,
+                        jitter_seed: int = 0) -> List[SimResult]:
     """Multiple jobs sharing one physical link (fair-share contention).
 
     Each timeline is an independent training job running the same ring
@@ -335,6 +380,12 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     bandwidth evenly (progressive filling).  Returns one
     :class:`SimResult` per job; with a single timeline this degenerates to
     :func:`simulate` (ring topology).
+
+    ``n_rails``/``rail_policy`` split the shared link into rails exactly
+    as in :func:`simulate` — contention then happens per rail.  With
+    ``jitter`` on, each job straggles independently (job ``j`` draws from
+    stream ``j`` of ``jitter_seed``), so co-located jobs do not flush in
+    lockstep.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -342,6 +393,7 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     eff_bw = tr.effective(bandwidth)
     sched = canonical_scheduler(scheduler or comm.scheduler)
     k = n_chunks if n_chunks is not None else comm.sched_chunks
+    n_rails = max(int(n_rails), 1)      # 0 and 1 both mean "no rails"
     cost = RingAllReduce(n_workers, eff_bw, addest, compression_ratio)
 
     jobs = []
@@ -351,13 +403,18 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
         buckets = fuse_buckets(tl, comm)
         plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
                               for b in buckets], scheduler=sched, n_chunks=k)
+        plan = assign_rails(plan, n_rails, rail_policy)
         flows = plan_to_flows(plan, cost, tr.per_tensor_overhead,
-                              job=f"job{j}", op_id_base=base)
+                              job=f"job{j}", op_id_base=base,
+                              n_rails=n_rails)
+        if jitter > 0.0:
+            flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
         base += len(flows)
         jobs.append((tl, buckets, plan, len(flows)))
         all_flows.extend(flows)
 
-    results = run_flows(all_flows)
+    results = run_flows(all_flows, rails={DEFAULT_LINK: n_rails}
+                        if n_rails > 1 else None)
     out: List[SimResult] = []
     pos = 0
     for j, (tl, buckets, plan, n_flows) in enumerate(jobs):
@@ -368,7 +425,8 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             t_sync = tl.t_back
         t_overhead = max(0.0, t_sync - tl.t_back)
         wire = sum(cost.wire_bytes(b.size) for b in served)
-        util = (wire / busy) / bandwidth if busy > 0 else 0.0
+        util = ((wire / busy) / (bandwidth / n_rails)
+                if busy > 0 else 0.0)
         out.append(SimResult(
             name=tl.name, n_workers=n_workers, bandwidth=bandwidth,
             effective_bw=eff_bw, t_batch=tl.t_batch, t_back=tl.t_back,

@@ -64,10 +64,11 @@ def _cells(spec) -> Dict[tuple, Dict]:
 
 
 def _k(model, servers, bw, transport, ratio=1.0, topo="ring", sched="fifo",
-       n_jobs=1):
+       n_jobs=1, n_rails=1, jitter_ms=0.0):
     """An ``index_cells`` key in CELL_AXES order, with trailing-axis
     defaults — figure builders only name the axes their sweep varies."""
-    return (model, servers, bw, transport, ratio, topo, sched, n_jobs)
+    return (model, servers, bw, transport, ratio, topo, sched, n_jobs,
+            n_rails, jitter_ms)
 
 def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
                             servers: Optional[Sequence[int]] = None,
@@ -242,6 +243,91 @@ def fig10_schedulers(models: Optional[Sequence[str]] = None,
                     row[f"{s}_overhead_ms"] = c["t_overhead"] * 1e3
                 out.append(row)
     return out
+
+
+def fig11_multirail(models: Optional[Sequence[str]] = None,
+                    bws: Optional[Sequence[float]] = None,
+                    rails: Optional[Sequence[int]] = None,
+                    schedulers: Optional[Sequence[str]] = None) -> List[Dict]:
+    """Multi-rail what-if: f_sim/t_overhead per (scheduler, n_rails) at
+    equal *aggregate* bandwidth — the multi-NIC scenario the paper's
+    single-NIC testbed could not measure.  Rows come from the registered
+    ``multirail`` grid, the sweep the ``scenario`` golden suite gates in
+    CI (chunked stripes and is rails-invariant; serialized fifo gains on
+    latency-bound models and loses on bandwidth-bound ones)."""
+    spec = _grid("multirail",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if rails is None
+                    else dict(n_rails=tuple(int(r) for r in rails))),
+                 **({} if schedulers is None
+                    else dict(scheduler=tuple(schedulers))))
+    ix = _cells(spec)
+    n, tr = spec.n_servers[0], spec.transport[0]
+    out = []
+    for m in spec.models:
+        for bw in spec.bandwidth_gbps:
+            row = dict(model=m, bandwidth_gbps=bw)
+            for s in spec.scheduler:
+                for r in spec.n_rails:
+                    c = ix[_k(m, n, bw, tr, sched=s, n_rails=r)]
+                    row[f"{s}_x{r}"] = c["scaling_factor"]
+                    row[f"{s}_x{r}_overhead_ms"] = c["t_overhead"] * 1e3
+            out.append(row)
+    return out
+
+
+def fig12_stragglers(models: Optional[Sequence[str]] = None,
+                     bws: Optional[Sequence[float]] = None,
+                     jitters_ms: Optional[Sequence[float]] = None,
+                     schedulers: Optional[Sequence[str]] = None) -> List[Dict]:
+    """Straggler what-if: overhead vs the seeded flush-jitter axis, per
+    scheduler.  Rows come from the registered ``straggler`` grid (gated by
+    the ``scenario`` golden suite): at full bandwidth the straggler tail
+    lands in t_overhead; in the bandwidth-bound regime the transmission
+    queue absorbs it."""
+    spec = _grid("straggler",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if jitters_ms is None
+                    else dict(jitter_ms=tuple(float(j) for j in jitters_ms))),
+                 **({} if schedulers is None
+                    else dict(scheduler=tuple(schedulers))))
+    ix = _cells(spec)
+    n, tr = spec.n_servers[0], spec.transport[0]
+    out = []
+    for m in spec.models:
+        for s in spec.scheduler:
+            for bw in spec.bandwidth_gbps:
+                row = dict(model=m, scheduler=s, bandwidth_gbps=bw)
+                for j in spec.jitter_ms:
+                    c = ix[_k(m, n, bw, tr, sched=s, jitter_ms=j)]
+                    row[f"jitter{j:g}ms"] = c["scaling_factor"]
+                    row[f"jitter{j:g}ms_overhead_ms"] = c["t_overhead"] * 1e3
+                out.append(row)
+    return out
+
+
+def multirail_whatif(model: str = "resnet101", bandwidth_gbps: float = 100.0,
+                     n_servers: int = 8, n_rails: int = 2,
+                     scheduler: str = "fifo") -> Dict:
+    """One-cell multi-rail comparison at equal aggregate bandwidth:
+    ``n_rails`` rails of ``bandwidth/n_rails`` each versus one fat NIC.
+    The direct-simulate twin of :func:`fig11_multirail` for exploration
+    outside the registered grid."""
+    n = n_servers * GPUS_PER_SERVER
+    bw = bandwidth_gbps * GBPS
+    tl = paper_timeline(model)
+    one = simulate(tl, n_workers=n, bandwidth=bw, transport="horovod_tcp",
+                   scheduler=scheduler)
+    split = simulate(tl, n_workers=n, bandwidth=bw, transport="horovod_tcp",
+                     scheduler=scheduler, n_rails=n_rails)
+    return dict(model=model, bandwidth_gbps=bandwidth_gbps,
+                scheduler=scheduler, n_rails=n_rails,
+                one_nic=one.scaling_factor, multirail=split.scaling_factor,
+                overhead_delta_ms=(split.t_overhead - one.t_overhead) * 1e3)
 
 
 def contention_whatif(models: Sequence[str] = ("resnet50", "vgg16"),

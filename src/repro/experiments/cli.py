@@ -99,7 +99,13 @@ def _cmd_list(_args: argparse.Namespace) -> int:
     return 0
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI's argument parser, importable without running anything.
+
+    ``tools/check_docs.py`` parses every documented
+    ``python -m repro.experiments ...`` line through this parser, so a
+    README example that drifts from the real flags fails CI.
+    """
     ap = argparse.ArgumentParser(prog="python -m repro.experiments",
                                  description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -135,8 +141,11 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     p = sub.add_parser("list", help="list known grids and suites")
     p.set_defaults(fn=_cmd_list)
+    return ap
 
-    args = ap.parse_args(argv)
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
     return args.fn(args)
 
 

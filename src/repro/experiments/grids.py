@@ -101,12 +101,39 @@ _register(ExperimentSpec(
     bandwidth_gbps=(10.0, 25.0, 100.0), transport=("horovod_tcp",),
     scheduler=("fifo", "chunked"), n_jobs=(1, 2, 4, 8), sched_chunks=32))
 
+# Scenario axes (the follow-up literature's territory — what the paper's
+# single-NIC, no-straggler testbed could not measure).
+
+# Multi-rail hosts: the cell's bandwidth is the *aggregate*; n_rails splits
+# it into equal rails and assign_rails deals the plan's ops across them
+# (round-robin).  The claims the golden suite gates: the chunked pipeline
+# stripes, so rails leave its overhead unchanged up to the tail-bucket
+# negotiation skew; the serialized fifo stream cannot stripe, so rails
+# *help* latency-bound models (parallel reductions) and *hurt*
+# bandwidth-bound ones (a whole bucket is stuck on one slower rail).
+_register(ExperimentSpec(
+    name="multirail", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(10.0, 25.0, 100.0), transport=("horovod_tcp",),
+    scheduler=("fifo", "chunked"), sched_chunks=8, n_rails=(1, 2, 4)))
+
+# Stragglers: each flow's flush is delayed by an exponential draw with
+# mean jitter_ms (seeded, so the grid is reproducible bit-for-bit).  The
+# gated claims: overhead is monotone in jitter; at full bandwidth the
+# straggler tail passes straight into t_overhead, while in the
+# bandwidth-bound regime the transmission queue absorbs it.
+_register(ExperimentSpec(
+    name="straggler", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(10.0, 100.0), transport=("horovod_tcp",),
+    scheduler=("fifo", "chunked"), sched_chunks=8,
+    jitter_ms=(0.0, 2.0, 10.0), jitter_seed=2020))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
               "paper-fig7", "paper-fig8", "paper-fig9"),
     "scheduler": ("scheduler-suite",),
     "paper-xl": ("xl-bandwidth", "xl-sched", "xl-contention"),
+    "scenario": ("multirail", "straggler"),
 }
 
 

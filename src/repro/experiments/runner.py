@@ -70,6 +70,12 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
     A cell with ``n_jobs > 1`` runs :func:`simulate_contention` with
     ``n_jobs`` copies of the same training job sharing one fair-share link;
     the jobs are symmetric, so the first job's result is the cell's record.
+
+    The scenario axes ride along as plain keyword arguments: ``n_rails``
+    splits the cell's (aggregate) bandwidth into rails under
+    ``spec.rail_policy``, and ``jitter_ms`` perturbs flush times under
+    ``spec.jitter_seed`` — both default-off, leaving the historical cells'
+    code path (and bits) untouched.
     """
     kwargs = dict(
         n_workers=cell.n_servers * spec.gpus_per_server,
@@ -78,6 +84,10 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
         compression_ratio=cell.compression_ratio,
         scheduler=cell.scheduler,
         n_chunks=spec.sched_chunks,
+        n_rails=cell.n_rails,
+        rail_policy=spec.rail_policy,
+        jitter=cell.jitter_ms / 1e3,
+        jitter_seed=spec.jitter_seed,
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())

@@ -21,15 +21,17 @@ SPEC_VERSION = 1
 # append at the end, with a default recorded in AXIS_DEFAULTS so artifacts
 # written before the axis existed still index consistently)
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
-             "compression_ratio", "topology", "scheduler", "n_jobs")
+             "compression_ratio", "topology", "scheduler", "n_jobs",
+             "n_rails", "jitter_ms")
 
-AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1}
+AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
+                 "jitter_ms": 0.0}
 
 # axes added after the first golden artifacts shipped: omitted from
 # serialized cells/specs while at their default, so pre-axis artifacts stay
 # byte-identical and spec hashes (the CI regression gate) never drift for
 # grids that do not sweep them
-_ELIDED_AT_DEFAULT = {"n_jobs": 1}
+_ELIDED_AT_DEFAULT = {"n_jobs": 1, "n_rails": 1, "jitter_ms": 0.0}
 
 
 def axis_value(cell: Dict, axis: str):
@@ -55,6 +57,8 @@ class Cell:
     topology: str
     scheduler: str = "fifo"
     n_jobs: int = 1                 # co-located jobs contending for the link
+    n_rails: int = 1                # rails splitting the aggregate bandwidth
+    jitter_ms: float = 0.0          # mean per-flow flush delay (stragglers)
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
@@ -87,16 +91,28 @@ class ExperimentSpec:
     topology: Tuple[str, ...] = ("ring",)
     scheduler: Tuple[str, ...] = ("fifo",)
     n_jobs: Tuple[int, ...] = (1,)      # contention axis (fair-share link)
+    n_rails: Tuple[int, ...] = (1,)     # multi-rail axis (aggregate bw split)
+    jitter_ms: Tuple[float, ...] = (0.0,)   # straggler axis (mean flush delay)
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
     timeout_ms: float = 5.0             # paper's fusion timeout
     sched_chunks: int = 4               # chunks/bucket for pipelined scheds
+    rail_policy: str = "round-robin"    # CommOp -> rail assignment policy
+    jitter_seed: int = 0                # seed of the straggler perturbation
+
+    # spec fields added after the first golden artifacts shipped, elided
+    # from canonical JSON at their default (same contract as the elided
+    # axes: pre-existing spec hashes never drift)
+    _ELIDED_FIELDS = (("n_jobs", (1,)), ("n_rails", (1,)),
+                      ("jitter_ms", (0.0,)), ("rail_policy", "round-robin"),
+                      ("jitter_seed", 0))
 
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
         for f in ("models", "n_servers", "bandwidth_gbps", "transport",
-                  "compression_ratio", "topology", "scheduler", "n_jobs"):
+                  "compression_ratio", "topology", "scheduler", "n_jobs",
+                  "n_rails", "jitter_ms"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -105,28 +121,32 @@ class ExperimentSpec:
 
     def expand(self) -> Tuple[Cell, ...]:
         """Cartesian product in stable axis order (model outermost)."""
-        return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j))
-                     for m, n, bw, t, r, topo, s, j in product(
+        return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j),
+                          int(nr), float(jm))
+                     for m, n, bw, t, r, topo, s, j, nr, jm in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
-                         self.topology, self.scheduler, self.n_jobs))
+                         self.topology, self.scheduler, self.n_jobs,
+                         self.n_rails, self.jitter_ms))
 
     @property
     def n_cells(self) -> int:
         return (len(self.models) * len(self.n_servers)
                 * len(self.bandwidth_gbps) * len(self.transport)
                 * len(self.compression_ratio) * len(self.topology)
-                * len(self.scheduler) * len(self.n_jobs))
+                * len(self.scheduler) * len(self.n_jobs)
+                * len(self.n_rails) * len(self.jitter_ms))
 
     # -- serialization -------------------------------------------------------
 
     def to_dict(self) -> Dict:
         d = asdict(self)
-        if self.n_jobs == (1,):
-            # elided while at its default: specs written before the
-            # contention axis existed keep their canonical JSON (and hence
-            # spec hash — the golden-artifact gate) unchanged
-            del d["n_jobs"]
+        for f, default in self._ELIDED_FIELDS:
+            # elided while at its default: specs written before the axis
+            # (or knob) existed keep their canonical JSON — and hence spec
+            # hash, the golden-artifact gate — unchanged
+            if getattr(self, f) == default:
+                del d[f]
         d["spec_version"] = SPEC_VERSION
         return d
 

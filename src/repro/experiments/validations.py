@@ -174,6 +174,89 @@ def _xl_contention(cells: Sequence[Dict]) -> Check:
             "solo_cell_matches_simulate_bitwise": exact}
 
 
+def _multirail(cells: Sequence[Dict]) -> Check:
+    """The multi-rail claims the scenario golden suite gates.
+
+    At *equal aggregate bandwidth*: the chunked pipeline stripes every
+    bucket across rails, so splitting the link never costs more than the
+    tail-bucket negotiation skew (the negotiation-carrying chunk's wire
+    runs at 1/n rate — an absolute, sub-millisecond effect); the
+    serialized fifo stream cannot stripe, so rails strictly *help*
+    latency-bound models (lanes run reductions in parallel) and strictly
+    *hurt* the bandwidth-bound VGG16 (whole buckets sit on a slower rail).
+    A fifo cell on one rail must be bit-exact with a ``simulate`` call
+    that never heard of the axis.
+    """
+    over = _by(cells, "model", "bandwidth_gbps", "scheduler", "n_rails",
+               value="t_overhead")
+    skew = 1e-3                      # seconds; see docstring
+    chunked_ok = all(v <= over[(m, bw, s, 1)] + skew
+                     for (m, bw, s, r), v in over.items()
+                     if s == "chunked" and r > 1)
+    fifo_helps = all(over[(m, bw, "fifo", 2)] < over[(m, bw, "fifo", 1)]
+                     for m in ("resnet50", "resnet101")
+                     for bw in (25.0, 100.0))
+    fifo_hurts = all(over[("vgg16", bw, "fifo", 2)]
+                     > over[("vgg16", bw, "fifo", 1)]
+                     for bw in (10.0, 25.0, 100.0))
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    from repro.experiments.spec import axis_value
+    solo = [c for c in cells if axis_value(c, "n_rails") == 1
+            and c["scheduler"] == "fifo" and c["model"] == "vgg16"]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"], scheduler=c["scheduler"],
+                         n_chunks=8).t_sync == c["t_sync"]
+                for c in solo)
+    return {"chunked_rails_never_slower_within_skew": chunked_ok,
+            "fifo_rails2_help_latency_bound_models": fifo_helps,
+            "fifo_rails2_hurt_bandwidth_bound_vgg16": fifo_hurts,
+            "fifo_rails1_matches_simulate_bitwise": exact}
+
+
+def _straggler(cells: Sequence[Dict]) -> Check:
+    """The straggler claims the scenario golden suite gates.
+
+    Delays are drawn once per (seed, flow) and scale linearly in the
+    jitter axis, so overhead must be monotone in jitter everywhere.  At
+    full bandwidth the straggler tail passes straight into t_overhead
+    (the sync was ready-time-bound already); in the bandwidth-bound
+    regime the transmission queue absorbs most of it — the overlap
+    argument the gradient-compression follow-up turns on.  Zero-jitter
+    cells must be bit-exact with a ``simulate`` that never saw the axis.
+    """
+    over = _by(cells, "model", "bandwidth_gbps", "scheduler", "jitter_ms",
+               value="t_overhead")
+    jits = sorted({k[3] for k in over})
+    hi = jits[-1]
+    mono = all(over[(m, bw, s, a)] <= over[(m, bw, s, b)] + 1e-9
+               for (m, bw, s, _) in over for a, b in zip(jits, jits[1:]))
+    tail = all(over[(m, 100.0, s, hi)] > over[(m, 100.0, s, 0.0)] + 1e-4
+               for (m, bw, s, _) in over if bw == 100.0)
+    damp = all(over[(m, 10.0, "chunked", hi)]
+               - over[(m, 10.0, "chunked", 0.0)]
+               < over[(m, 100.0, "chunked", hi)]
+               - over[(m, 100.0, "chunked", 0.0)]
+               for m in ("resnet50", "resnet101"))
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    from repro.experiments.spec import axis_value
+    base = [c for c in cells if axis_value(c, "jitter_ms") == 0.0
+            and c["model"] == "vgg16"]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"], scheduler=c["scheduler"],
+                         n_chunks=8).t_sync == c["t_sync"]
+                for c in base)
+    return {"overhead_monotone_in_jitter": mono,
+            "jitter_tail_hits_full_bw_overhead": tail,
+            "queue_absorbs_jitter_when_bw_bound": damp,
+            "jitter0_matches_simulate_bitwise": exact}
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -186,6 +269,8 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "xl-bandwidth": _xl_bandwidth,
     "xl-sched": _xl_sched,
     "xl-contention": _xl_contention,
+    "multirail": _multirail,
+    "straggler": _straggler,
 }
 
 

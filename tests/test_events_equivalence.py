@@ -74,15 +74,19 @@ def _assert_equivalent(flows, capacities=None, *, exact=False):
 # randomized equivalence (satellite: property tests vs the seed engine)
 # ---------------------------------------------------------------------------
 
+# generator bounds deliberately straddle _SMALL_PLAN_MAX_FLOWS (64): both
+# the plain-list small-plan setup and the columnar numpy/bulk-commit setup
+# must face the randomized reference comparison
+
 @settings(max_examples=40, deadline=None)
-@given(n=st.integers(1, 80), n_jobs=st.integers(1, 6),
+@given(n=st.integers(1, 160), n_jobs=st.integers(1, 6),
        n_links=st.integers(1, 3), seed=st.integers(0, 10_000))
 def test_multi_job_equivalence(n, n_jobs, n_links, seed):
     _assert_equivalent(_random_flows(n, n_jobs, n_links, seed))
 
 
 @settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 60), n_jobs=st.integers(2, 6),
+@given(n=st.integers(1, 120), n_jobs=st.integers(2, 6),
        seed=st.integers(0, 10_000),
        cap=st.sampled_from([0.25, 0.5, 0.75, 2.0, 4.0]))
 def test_fractional_and_multi_capacity_links(n, n_jobs, seed, cap):
@@ -91,14 +95,14 @@ def test_fractional_and_multi_capacity_links(n, n_jobs, seed, cap):
 
 
 @settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 60), n_jobs=st.integers(1, 5),
+@given(n=st.integers(1, 120), n_jobs=st.integers(1, 5),
        seed=st.integers(0, 10_000))
 def test_duplicate_ready_times(n, n_jobs, seed):
     _assert_equivalent(_random_flows(n, n_jobs, 2, seed, dup_ready=True))
 
 
 @settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 60), seed=st.integers(0, 10_000),
+@given(n=st.integers(1, 120), seed=st.integers(0, 10_000),
        hold_all=st.booleans())
 def test_hold_vs_pipelined_single_job_bit_exact(n, seed, hold_all):
     """A single job never contends, so both engines take their closed
@@ -114,6 +118,161 @@ def test_known_seeds_cover_contention():
     flows = _random_flows(60, 4, 1, seed=7, hold_p=0.0)
     _, new = _assert_equivalent(flows)
     assert any(r.contended for r in new)
+
+
+# ---------------------------------------------------------------------------
+# multi-rail links: per-rail clocks vs reference with one link per rail
+# ---------------------------------------------------------------------------
+
+def _with_rails(flows, n_rails, rng):
+    return [f._replace(rail=int(rng.integers(0, n_rails)),
+                       job=f"{f.job}@r{int(rng.integers(0, n_rails))}")
+            for f in flows]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 120), n_jobs=st.integers(1, 4),
+       n_rails=st.integers(2, 4), seed=st.integers(0, 10_000))
+def test_rails_equal_reference_with_link_per_rail(n, n_jobs, n_rails, seed):
+    """A LinkSet of r rails must behave exactly like r independently named
+    links: run the same flows through the seed engine with the rail mangled
+    into the link name."""
+    rng = np.random.default_rng(seed ^ 0xA5A5)
+    flows = _with_rails(_random_flows(n, n_jobs, 1, seed), n_rails, rng)
+    try:
+        ref = run_reference_flows(
+            [f._replace(link=f"{f.link}#r{f.rail}") for f in flows],
+            max_iters_factor=200)
+    except RuntimeError:
+        pytest.skip("seed engine did not converge on this input")
+    new = run_flows(flows, rails={"l0": n_rails})
+    for a, b in zip(ref, new):
+        scale = max(abs(a.end), abs(b.end), 1e-9)
+        assert abs(a.start - b.start) <= 1e-9 * scale + 1e-15
+        assert abs(a.wire_end - b.wire_end) <= 1e-9 * scale + 1e-15
+        assert abs(a.end - b.end) <= 1e-9 * scale + 1e-15
+        assert a.contended == b.contended
+
+
+def test_rails_one_is_bit_identical_to_no_rails():
+    flows = _random_flows(50, 3, 2, seed=11)
+    assert run_flows(flows) == run_flows(flows, rails={"l0": 1, "l1": 1})
+
+
+def test_rails_reference_equivalence_known_seeds():
+    """Deterministic twin of the property test above (runs without
+    hypothesis): rails == independently named links, on seeds that do
+    produce cross-job rail contention.  The 120-flow cases exceed
+    ``_SMALL_PLAN_MAX_FLOWS``, so the columnar numpy setup (and its rails
+    routing) is exercised too, not just the small-plan path."""
+    for n, seed in ((48, 2), (48, 13), (120, 99), (120, 7)):
+        rng = np.random.default_rng(seed)
+        flows = _with_rails(_random_flows(n, 3, 1, seed, hold_p=0.2),
+                            2, rng)
+        ref = run_reference_flows(
+            [f._replace(link=f"{f.link}#r{f.rail}") for f in flows],
+            max_iters_factor=200)
+        new = run_flows(flows, rails={"l0": 2})
+        assert any(r.contended for r in new)
+        for a, b in zip(ref, new):
+            scale = max(abs(a.end), abs(b.end), 1e-9)
+            assert abs(a.end - b.end) <= 1e-9 * scale + 1e-15
+            assert a.contended == b.contended
+
+
+def test_rails_heavy_contention_bulk_path():
+    """Rails under the bulk-commit regime: 6 jobs x 24-chunk bursts whose
+    per-rail lanes saturate one LinkSet — far above the small-plan
+    threshold, so the numpy setup, completion spin, and bulk commit all
+    run with per-rail clocks.  Totals must match the reference engine."""
+    flows = []
+    base = 0
+    for j in range(6):
+        for b in range(12):
+            for c in range(24):
+                rail = (b + c) % 2
+                flows.append(FlowSpec(
+                    op_id=base, ready=0.01 * b, work=1e-4, latency=1e-5,
+                    priority=float(b), job=f"job{j}@r{rail}", rail=rail))
+                base += 1
+    new = run_flows(flows, rails={"nic": 2})
+    ref = run_reference_flows(
+        [f._replace(link=f"{f.link}#r{f.rail}") for f in flows],
+        max_iters_factor=200)
+    assert len(new) == len(flows)
+    for a, b in zip(ref, new):
+        scale = max(abs(a.end), abs(b.end), 1e-9)
+        assert abs(a.end - b.end) <= 1e-9 * scale + 1e-15
+
+
+def test_rails_isolate_contention():
+    """Two jobs whose flows sit on different rails of one named link never
+    contend; forced onto the same rail they must."""
+    mk = lambda rail: [FlowSpec(op_id=i + rail * 10, ready=0.0, work=0.5,
+                                job=f"j{rail}", rail=rail)
+                       for i in range(3)]
+    split = run_flows(mk(0) + mk(1), rails={"nic": 2})
+    assert not any(r.contended for r in split)
+    same = run_flows([f._replace(rail=0) for f in mk(0) + mk(1)],
+                     rails={"nic": 2})
+    assert all(r.contended for r in same)
+    # rails are 1/n links: a lone flow still runs at the rail's full rate
+    assert split[0].wire_end == 0.5
+
+
+# ---------------------------------------------------------------------------
+# small-plan setup path vs the columnar numpy path (same engine, same bits)
+# ---------------------------------------------------------------------------
+
+def test_small_plan_setup_bit_identical_to_numpy_setup(monkeypatch):
+    import repro.core.events as ev
+    for seed in (1, 7, 42):
+        flows = _random_flows(40, 4, 2, seed, dup_ready=seed == 7)
+        small = run_flows(flows)
+        monkeypatch.setattr(ev, "_SMALL_PLAN_MAX_FLOWS", 0)
+        numpy_path = run_flows(flows)
+        monkeypatch.undo()
+        assert small == numpy_path
+
+
+# ---------------------------------------------------------------------------
+# seeded straggler perturbation (jitter axis)
+# ---------------------------------------------------------------------------
+
+def test_perturb_flows_deterministic_and_seed_sensitive():
+    from repro.core.events import perturb_flows
+    flows = _random_flows(30, 2, 1, seed=3)
+    a = perturb_flows(flows, 0.01, seed=123)
+    b = perturb_flows(flows, 0.01, seed=123)
+    assert a == b, "same seed must reproduce bit-identical delays"
+    c = perturb_flows(flows, 0.01, seed=124)
+    assert a != c, "different seeds must perturb differently"
+    d = perturb_flows(flows, 0.01, seed=123, stream=1)
+    assert a != d, "streams (contention jobs) must straggle independently"
+    assert all(p.ready >= f.ready for f, p in zip(flows, a))
+    assert a[0]._replace(ready=flows[0].ready) == flows[0]  # only ready moves
+
+
+def test_perturb_flows_zero_jitter_is_identity():
+    from repro.core.events import perturb_flows
+    flows = _random_flows(10, 1, 1, seed=5)
+    out = perturb_flows(flows, 0.0, seed=9)
+    assert out == flows
+    assert out[0] is flows[0], "zero jitter must not rebuild flows"
+
+
+def test_perturb_flows_linear_in_jitter():
+    """Delays scale linearly with the jitter mean at fixed seed — the
+    property the straggler grid's monotonicity validator rests on."""
+    from repro.core.events import perturb_flows
+    flows = _random_flows(20, 1, 1, seed=8)
+    d1 = [p.ready - f.ready for f, p in zip(flows,
+                                            perturb_flows(flows, 0.5, 77))]
+    d2 = [p.ready - f.ready for f, p in zip(flows,
+                                            perturb_flows(flows, 1.0, 77))]
+    assert all(abs(b - 2 * a) <= 1e-12 * max(b, 1.0)
+               for a, b in zip(d1, d2))
+    assert all(b >= a for a, b in zip(d1, d2))
 
 
 # ---------------------------------------------------------------------------

@@ -131,6 +131,60 @@ def test_n_jobs_axis_elided_at_default():
     assert ExperimentSpec.from_dict(swept.to_dict()) == swept
 
 
+def test_scenario_axes_elided_at_default():
+    """n_rails / jitter_ms (and their spec-level knobs) must not disturb
+    the seed schema: cells and specs omit them at defaults, so spec
+    hashes and artifact bytes of the historical grids never move."""
+    solo = Cell("resnet50", 2, 10.0, "ideal", 1.0, "ring")
+    assert "n_rails" not in solo.to_dict()
+    assert "jitter_ms" not in solo.to_dict()
+    assert Cell.from_dict(solo.to_dict()) == solo
+    railed = Cell("resnet50", 2, 10.0, "ideal", 1.0, "ring", "chunked",
+                  1, 2, 5.0)
+    d = railed.to_dict()
+    assert d["n_rails"] == 2 and d["jitter_ms"] == 5.0
+    assert Cell.from_dict(d) == railed
+
+    plain = ExperimentSpec(name="t")
+    for key in ("n_rails", "jitter_ms", "rail_policy", "jitter_seed"):
+        assert key not in plain.to_dict()
+    swept = ExperimentSpec(name="t", n_rails=(1, 2), jitter_ms=(0.0, 5.0),
+                           rail_policy="size-balanced", jitter_seed=7)
+    d = swept.to_dict()
+    assert d["n_rails"] == (1, 2) and d["rail_policy"] == "size-balanced"
+    assert swept.spec_hash() != plain.spec_hash()
+    assert ExperimentSpec.from_dict(json.loads(json.dumps(
+        swept.to_dict()))) == swept
+    # the historical paper grid's canonical JSON mentions no new axis
+    assert "n_rails" not in GRIDS["paper-fig1"].canonical_json()
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_executors_bit_identical_on_scenario_axes(executor):
+    """Seeded jitter and rails must not break executor determinism: the
+    perturbation depends only on (seed, job, flow count), never on which
+    thread or process ran the cell."""
+    spec = ExperimentSpec(name="t", models=("resnet50",), n_servers=(2,),
+                          bandwidth_gbps=(10.0, 100.0),
+                          scheduler=("fifo", "chunked"), sched_chunks=8,
+                          n_rails=(1, 2), jitter_ms=(0.0, 5.0),
+                          jitter_seed=13)
+    serial = run_spec(spec, executor="serial")
+    other = run_spec(spec, executor=executor)
+    assert serial["cells"] == other["cells"]
+
+
+def test_scenario_suite_resolves_and_validates():
+    specs = grids.resolve("scenario")
+    assert [s.name for s in specs] == ["multirail", "straggler"]
+    from repro.experiments.validations import VALIDATORS
+    for s in specs:
+        assert s.name in VALIDATORS, f"gated grid {s.name} must carry checks"
+    assert GRIDS["multirail"].n_rails == (1, 2, 4)
+    assert GRIDS["straggler"].jitter_ms == (0.0, 2.0, 10.0)
+    assert GRIDS["straggler"].jitter_seed != 0   # seed is pinned, not implicit
+
+
 def test_paper_xl_suite_resolves_and_validates():
     specs = grids.resolve("paper-xl")
     assert [s.name for s in specs] == ["xl-bandwidth", "xl-sched",

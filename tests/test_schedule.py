@@ -271,6 +271,78 @@ def test_utilization_bounded_everywhere():
 
 
 # ---------------------------------------------------------------------------
+# rail assignment (multi-rail NICs)
+# ---------------------------------------------------------------------------
+
+def _rail_plan(n_buckets=6, sched="chunked", k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    buckets = [(0.001 * i, float(rng.uniform(1e6, 8e7)), 1)
+               for i in range(n_buckets)]
+    return lower_buckets(buckets, scheduler=sched, n_chunks=k)
+
+
+def test_assign_rails_one_rail_is_same_object():
+    from repro.core.schedule import assign_rails
+    plan = _rail_plan()
+    assert assign_rails(plan, 1) is plan
+    assert assign_rails(plan, 0) is plan
+
+
+def test_assign_rails_round_robin_stripes_and_conserves():
+    from repro.core.schedule import assign_rails
+    plan = _rail_plan(sched="chunked", k=4)
+    out = assign_rails(plan, 2)
+    assert out is not plan
+    # only channels change — ids, sizes, order, readies all intact
+    from dataclasses import replace
+    assert [replace(op, channel=0) for op in out.ops] == list(plan.ops)
+    assert [op.channel for op in out.ops] == [i % 2
+                                              for i in range(len(out.ops))]
+    # k divisible by rails: every bucket is striped across both rails
+    for b in range(plan.n_buckets):
+        rails = {op.channel for op in out.ops if op.bucket_id == b}
+        assert rails == {0, 1}
+
+
+def test_assign_rails_size_balanced_bounds_imbalance():
+    from repro.core.schedule import assign_rails
+    for seed in range(5):
+        plan = _rail_plan(n_buckets=9, sched="fifo", seed=seed)
+        out = assign_rails(plan, 3, policy="size-balanced")
+        load = {r: 0.0 for r in range(3)}
+        for op in out.ops:
+            load[op.channel] += op.size
+        assert sum(load.values()) == pytest.approx(plan.total_bytes)
+        # greedy bound: spread no worse than the largest single op
+        biggest = max(op.size for op in plan.ops)
+        assert max(load.values()) - min(load.values()) <= biggest + 1e-6
+
+
+def test_assign_rails_rejects_unknown_policy():
+    from repro.core.schedule import assign_rails
+    with pytest.raises(KeyError, match="rail policy"):
+        assign_rails(_rail_plan(), 2, policy="affinity")
+
+
+def test_plan_to_flows_rails_scale_work_and_split_lanes():
+    from repro.core.schedule import assign_rails
+    cost = RingAllReduce(64, 10 * GBPS, AddEst.v100())
+    unassigned = _rail_plan(sched="chunked", k=4)
+    plan = assign_rails(unassigned, 2)
+    base = plan_to_flows(unassigned, cost, 1e-6)
+    railed = plan_to_flows(plan, cost, 1e-6, n_rails=2)
+    for f0, f2, op in zip(base, railed, plan.ops):
+        assert f2.work == f0.work * 2          # per-rail bw = aggregate/2
+        assert f2.latency == f0.latency        # reductions don't scale
+        assert f2.rail == op.channel
+        assert f2.link == f0.link == "nic"     # one named link, two rails
+        assert f2.job == ("job0" if op.channel == 0 else "job0@r1")
+    # total wire work is conserved: n x rails at 1/n rate
+    assert sum(f.work for f in railed) == pytest.approx(
+        2 * sum(f.work for f in base))
+
+
+# ---------------------------------------------------------------------------
 # multi-job contention
 # ---------------------------------------------------------------------------
 

@@ -221,3 +221,94 @@ def test_tpu_whatif_compression_helps_multipod():
     comp = tpu_whatif(cfg, shape, n_pods=2, dcn_gbps=25.0,
                       compression_ratio=4.0)
     assert comp.scaling_factor >= plain.scaling_factor - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# scenario axes: multi-rail and straggler jitter through simulate()
+# ---------------------------------------------------------------------------
+
+def test_simulate_default_rails_and_jitter_are_identity():
+    """n_rails=1, jitter=0 must be the same code path bit-for-bit — the
+    contract that keeps the committed golden artifacts valid."""
+    tl = from_cnn("vgg16")
+    plain = simulate(tl, n_workers=64, bandwidth=25 * GBPS,
+                     transport="horovod_tcp")
+    expl = simulate(tl, n_workers=64, bandwidth=25 * GBPS,
+                    transport="horovod_tcp", n_rails=1, jitter=0.0,
+                    rail_policy="round-robin", jitter_seed=99)
+    assert plain.t_sync == expl.t_sync
+    assert plain.buckets == expl.buckets
+
+
+def test_simulate_chunked_rails_invariant_at_equal_aggregate():
+    """Striped chunked plans: splitting one fat NIC into rails moves
+    overhead by no more than the tail-bucket negotiation skew."""
+    tl = from_cnn("vgg16")
+    base = simulate(tl, n_workers=64, bandwidth=10 * GBPS,
+                    transport="horovod_tcp", scheduler="chunked",
+                    n_chunks=8)
+    for r in (2, 4):
+        split = simulate(tl, n_workers=64, bandwidth=10 * GBPS,
+                         transport="horovod_tcp", scheduler="chunked",
+                         n_chunks=8, n_rails=r)
+        assert abs(split.t_overhead - base.t_overhead) < 1e-3
+
+
+def test_simulate_fifo_rails_regime_split():
+    """The serialized stream cannot stripe: rails help the latency-bound
+    resnet101 (parallel reductions) and hurt the bandwidth-bound vgg16."""
+    rn = from_cnn("resnet101")
+    helped = (simulate(rn, n_workers=64, bandwidth=100 * GBPS,
+                       transport="horovod_tcp", n_rails=2).t_overhead
+              < simulate(rn, n_workers=64, bandwidth=100 * GBPS,
+                         transport="horovod_tcp").t_overhead)
+    vgg = from_cnn("vgg16")
+    hurt = (simulate(vgg, n_workers=64, bandwidth=10 * GBPS,
+                     transport="horovod_tcp", n_rails=2).t_overhead
+            > simulate(vgg, n_workers=64, bandwidth=10 * GBPS,
+                       transport="horovod_tcp").t_overhead)
+    assert helped and hurt
+
+
+def test_simulate_rail_policies_conserve_scaling_bounds():
+    tl = from_cnn("resnet50")
+    for policy in ("round-robin", "size-balanced"):
+        r = simulate(tl, n_workers=64, bandwidth=25 * GBPS,
+                     transport="horovod_tcp", scheduler="chunked",
+                     n_chunks=8, n_rails=2, rail_policy=policy)
+        assert 0.0 < r.scaling_factor <= 1.0
+        assert 0.0 <= r.network_utilization <= 1.0
+
+
+def test_simulate_jitter_monotone_and_seeded():
+    tl = from_cnn("resnet50")
+    kw = dict(n_workers=64, bandwidth=100 * GBPS, transport="horovod_tcp")
+    prev = -1.0
+    for j in (0.0, 0.002, 0.01):
+        r = simulate(tl, jitter=j, jitter_seed=5, **kw)
+        assert r.t_sync >= prev - 1e-12
+        prev = r.t_sync
+    a = simulate(tl, jitter=0.01, jitter_seed=5, **kw)
+    b = simulate(tl, jitter=0.01, jitter_seed=5, **kw)
+    c = simulate(tl, jitter=0.01, jitter_seed=6, **kw)
+    assert a.t_sync == b.t_sync          # deterministic given the seed
+    assert a.t_sync != c.t_sync          # and sensitive to it
+
+
+def test_simulate_contention_rails_and_jitter():
+    from repro.core.simulator import simulate_contention
+    tls = [from_cnn("resnet50"), from_cnn("vgg16")]
+    plain = simulate_contention(tls, n_workers=64, bandwidth=25 * GBPS,
+                                scheduler="chunked", n_chunks=8)
+    railed = simulate_contention(tls, n_workers=64, bandwidth=25 * GBPS,
+                                 scheduler="chunked", n_chunks=8, n_rails=2)
+    assert len(railed) == 2
+    for p, r in zip(plain, railed):
+        assert 0.0 < r.scaling_factor <= 1.0
+        assert r.name == p.name
+    # jobs straggle from independent streams: both jobs' results move
+    jit = simulate_contention(tls, n_workers=64, bandwidth=25 * GBPS,
+                              scheduler="chunked", n_chunks=8,
+                              jitter=0.005, jitter_seed=11)
+    assert all(j.t_sync >= p.t_sync - 1e-12 for p, j in zip(plain, jit))
+    assert any(j.t_sync != p.t_sync for p, j in zip(plain, jit))

@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Docs drift gate (CI `docs` job): documented sweeps must stay real.
+
+Two checks over README.md, ROADMAP.md, and docs/*.md:
+
+1. every ``--grid NAME`` mentioned anywhere must name a registered grid
+   or suite (``repro.experiments.grids``);
+2. every documented ``python -m repro.experiments ...`` command line —
+   in fenced code blocks or inline code spans — must parse against the
+   real CLI parser (``repro.experiments.cli.build_parser``), i.e. a
+   ``--help``-level smoke test with no simulation run.
+
+Snippets containing an obvious placeholder (``<suite>``, ``...``,
+``{run,...}``) are skipped as templates.  The gate also enforces a floor
+on how many lines/names it found, so a regex regression cannot silently
+turn the check into a no-op.
+
+Usage: python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+DOC_FILES = ["README.md", "ROADMAP.md",
+             *sorted(p.relative_to(REPO).as_posix()
+                     for p in (REPO / "docs").glob("*.md"))]
+
+# a documented line found fewer times than this means the extractor broke
+MIN_CLI_LINES = 5
+MIN_GRID_MENTIONS = 5
+
+_GRID_RE = re.compile(r"--grid[= ]+(\S+)")
+_CLI_RE = re.compile(r"python -m repro\.experiments(?:\s|$)")
+_FENCE_RE = re.compile(r"^```")
+_INLINE_RE = re.compile(r"`([^`]+)`", re.S)
+
+
+def _is_template(snippet: str) -> bool:
+    return any(tok in snippet for tok in ("<", ">", "...", "…", "{", "}"))
+
+
+def _code_snippets(text: str) -> List[str]:
+    """Lines of fenced code blocks + whitespace-normalized inline spans.
+
+    Shell comments are stripped from fenced lines, and fenced blocks are
+    removed before inline-span matching so a ``` fence cannot masquerade
+    as a giant inline span.
+    """
+    out: List[str] = []
+    prose: List[str] = []
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            out.append(line.split(" #")[0].strip())
+        else:
+            prose.append(line)
+    for m in _INLINE_RE.finditer("\n".join(prose)):
+        out.append(" ".join(m.group(1).split()))
+    return out
+
+
+def check_file(path: Path, known: set, parser) -> Tuple[List[str], int, int]:
+    text = path.read_text()
+    failures: List[str] = []
+    n_grids = n_lines = 0
+
+    for m in _GRID_RE.finditer(text):
+        tok = m.group(1)
+        if _is_template(tok):
+            continue
+        word = re.match(r"[\w.-]+", tok)
+        name = word.group(0) if word else tok
+        n_grids += 1
+        if name not in known:
+            failures.append(
+                f"{path.name}: `--grid {name}` is not a registered "
+                f"grid or suite")
+
+    for snippet in _code_snippets(text):
+        m = _CLI_RE.search(snippet)
+        if not m or _is_template(snippet):
+            continue
+        argv = snippet[m.end():].split()
+        if not argv:
+            continue
+        n_lines += 1
+        try:
+            parser.parse_args(argv)
+        except SystemExit as e:
+            if e.code not in (0, None):
+                failures.append(
+                    f"{path.name}: CLI line does not parse: {snippet}")
+    return failures, n_grids, n_lines
+
+
+def main() -> int:
+    from repro.experiments import grids
+    from repro.experiments.cli import build_parser
+
+    known = set(grids.GRIDS) | set(grids.SUITES)
+    parser = build_parser()
+    failures: List[str] = []
+    total_grids = total_lines = 0
+
+    for rel in DOC_FILES:
+        path = REPO / rel
+        if not path.exists():
+            failures.append(f"{rel}: documented file is missing")
+            continue
+        fails, n_grids, n_lines = check_file(path, known, parser)
+        failures.extend(fails)
+        total_grids += n_grids
+        total_lines += n_lines
+        print(f"{rel}: {n_grids} --grid mention(s), "
+              f"{n_lines} CLI line(s) checked")
+
+    if total_lines < MIN_CLI_LINES:
+        failures.append(
+            f"extractor found only {total_lines} CLI lines "
+            f"(< {MIN_CLI_LINES}); the docs check may have rotted")
+    if total_grids < MIN_GRID_MENTIONS:
+        failures.append(
+            f"extractor found only {total_grids} --grid mentions "
+            f"(< {MIN_GRID_MENTIONS}); the docs check may have rotted")
+
+    if failures:
+        print()
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(f"docs OK: {total_grids} grid mentions and {total_lines} CLI "
+          f"lines all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
