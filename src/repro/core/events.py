@@ -62,6 +62,20 @@ of flows.  This version is indexed end to end:
   stretches are computed with vectorized numpy cumulative sums and
   committed in one pass, up to the first membership-changing boundary
   (ready gate, ``hold`` flow, job exhaustion, or calendar interrupt).
+  Completion *times* for the merged stretch are produced by the same
+  chained left fold the scalar spin performs — one ``np.cumsum`` over the
+  per-step deltas of the (mark, flow)-sorted merge of every job's chain —
+  so bulk-committed results are **bit-identical** to the scalar event
+  loop, not merely within tolerance.
+- **heap-mode resolved prefix**: a priority-scheduled job (ready times
+  regress along service order) cannot expose a pointer chain, but its
+  *ready frontier* is still a resolved sequence: sorting the admissible
+  heap by ``(priority, op_id)`` yields exactly the order the scalar loop
+  would pop, valid until the next gated flow's ready time (the *gating
+  boundary*) is crossed.  Heap-mode jobs therefore contribute that sorted
+  prefix to the bulk chain decomposition, with the gating boundary folded
+  into the job's violation point; the sorted suffix left after a commit
+  is itself a valid heap, so no re-heapify is needed.
 - **small-plan setup**: the columnar numpy views that pay for themselves on
   thousand-flow plans cost more than the whole event loop on the two-dozen-
   op plans the paper grids generate, so below
@@ -204,7 +218,7 @@ class _Link:
     """
 
     __slots__ = ("cap", "n", "share", "S", "t_last", "heap", "version",
-                 "all_contended")
+                 "all_contended", "bulk_cap", "bulk_skip")
 
     def __init__(self, cap: float):
         self.cap = cap
@@ -215,6 +229,15 @@ class _Link:
         self.heap: List = []        # (service completion mark, flow index)
         self.version = 0
         self.all_contended = False
+        # adaptive per-call chain cap for the bulk path: grows with actual
+        # commit sizes so short windows (dense jittered ready gates) pay
+        # O(committed), not O(remaining), per call
+        self.bulk_cap = 64
+        # back-off: after a weak commit or a gate rejection, let this many
+        # completions go scalar before attempting bulk again — a window
+        # too small to amortize the numpy setup is served cheaper event by
+        # event, and a large window only ever waits O(skip) scalar events
+        self.bulk_skip = 0
 
 
 class _LinkSet:
@@ -236,15 +259,33 @@ class _LinkSet:
 class _Job:
     """Serialization resource: one wire in flight, priority admission."""
 
-    __slots__ = ("order", "rdy", "ptr", "gated", "readyq", "free", "busy",
-                 "link", "onp", "wk", "rd", "hd", "lt")
+    __slots__ = ("order", "rdy", "ptr", "gated", "gptr", "g_rd", "readyq",
+                 "n_ready", "free", "busy", "link", "onp", "wk", "rd", "hd",
+                 "lt")
 
     def __init__(self):
         self.order: List[int] = []   # flow indices in (priority, op_id) order
         self.rdy: List[float] = []   # ready times along ``order`` (ptr mode)
         self.ptr = 0
-        self.gated: Optional[List] = None   # ready-time heap (heap mode)
-        self.readyq: Optional[List] = None  # (priority, op_id, idx) heap
+        # heap mode — two representations behind one mode flag
+        # (``gated is None`` still means pointer mode):
+        #
+        # * small plans: ``gated`` is a build-once list of (ready, priority,
+        #   op_id, idx) tuples sorted by ready; flows only ever *leave* it,
+        #   so a pointer (``gptr``) replaces a heap and draining is a
+        #   slice.  ``readyq`` is the classic (priority, op_id, idx) heap.
+        # * columnar plans: ``gated`` is the position-into-``order`` array
+        #   sorted by ready (``g_rd`` holds the sorted ready times), and
+        #   ``readyq`` is a boolean *mask* over ``order`` positions.  The
+        #   admissible set in service order is just ``nonzero(mask)`` — the
+        #   bulk path's resolved prefix — a drain is one sliced scatter,
+        #   and a scalar pop is ``argmax(mask)`` (``order`` is sorted by
+        #   (priority, op_id), so the first set bit is the best flow).
+        self.gated = None
+        self.gptr = 0
+        self.g_rd = None
+        self.readyq = None
+        self.n_ready = 0
         self.free = 0.0
         self.busy = False
         self.link: Optional[_Link] = None   # sole link, if homogeneous
@@ -257,6 +298,30 @@ class _Job:
 # event loop on the two-dozen-op plans the paper grids generate, while the
 # bulk path only ever engages on contended multi-job plans far above this
 _SMALL_PLAN_MAX_FLOWS = 64
+
+# bulk commit engages once a link serves at least this many concurrent
+# flows; tests raise it to infinity to force the scalar path (bulk must be
+# bit-identical, so the knob is a dispatch threshold, not a semantic one)
+_BULK_MIN_ACTIVE = 2
+
+# hard upper bound on a bulk call's per-job candidate chain (the adaptive
+# per-link cap never exceeds it): bounds the numpy work a short commit
+# window can waste on chains it will not commit; correctness is unaffected
+# — a capped chain just ends in an artificial boundary and the next call
+# continues the same cumsum bit-exactly
+_BULK_CHAIN_CAP = 2048
+
+# drains of this many newly-ready flows rebuild the admissible heap with
+# one extend+heapify instead of per-item pushes (same pop order: a heap's
+# pop sequence is the sorted multiset regardless of internal layout)
+_DRAIN_BATCH_MIN = 16
+
+# stall detection: the engine raises after this many consecutive
+# no-progress calendar pops (stale projections / superseded admissions);
+# the counter resets on any committed work — an admission, a served
+# completion, or a bulk commit.  Module-level so tests can tighten them.
+_STALL_FACTOR = 4
+_STALL_BASE = 1000
 
 
 class NetworkEngine:
@@ -347,14 +412,23 @@ class NetworkEngine:
                 trigger = rdy[0]
             else:
                 # ready times regress along service order (e.g. priority
-                # plans): gate admissions through a ready-time heap
-                jb.gated = [(rdy_col[i], pr_col[i], op_col[i], i)
-                            for i in order]
-                heapify(jb.gated)
-                jb.readyq = []
-                trigger = jb.gated[0][0]
+                # plans): gate admissions on ready order.  ``order`` is
+                # already (priority, op_id)-sorted, so sorting *positions*
+                # stably by ready yields (ready, priority, op_id) order.
+                if small:
+                    jb.gated = sorted((rdy_col[i], pr_col[i], op_col[i], i)
+                                      for i in order)
+                    jb.readyq = []
+                    trigger = jb.gated[0][0]
+                else:
+                    g_pos = np.argsort(rd_ix, kind="stable")
+                    jb.gated = g_pos
+                    jb.g_rd = rd_ix[g_pos]
+                    jb.readyq = np.zeros(len(order), dtype=bool)
+                    trigger = float(jb.g_rd[0])
             seq += 1
-            heappush(cal, (trigger if trigger > 0.0 else 0.0, _ADMIT, seq, jb))
+            cal.append((trigger if trigger > 0.0 else 0.0, _ADMIT, seq, jb))
+        heapify(cal)                # one pass beats n pushes at setup
 
         if small:
             start: List[float] = [0.0] * n_total
@@ -368,10 +442,14 @@ class NetworkEngine:
             contended = np.zeros(n_total, dtype=bool)
         n_done = 0
         stale = 0                   # consecutive no-progress calendar pops
+        stall_limit = _STALL_FACTOR * n_total + _STALL_BASE
+        sweep_at = 256              # calendar size that triggers a compaction
         flws = flows                # local alias for the hot loops
 
         # -- admission: put flow ``i`` on its link at time ``t`` ------------
         def _admit(i: int, jb: _Job, t: float) -> _Link:
+            nonlocal stale
+            stale = 0               # an admission is committed work
             L = link_of[i]
             if L.n:
                 if t > L.t_last:
@@ -410,25 +488,72 @@ class NetworkEngine:
                     seq += 1
                     heappush(cal, (trig, _ADMIT, seq, jb))
             else:
-                if jb.readyq:
+                if small:
+                    have_ready = bool(jb.readyq)
+                    nxt = jb.gated[jb.gptr][0] \
+                        if jb.gptr < len(jb.gated) else None
+                else:
+                    have_ready = jb.n_ready > 0
+                    nxt = float(jb.g_rd[jb.gptr]) \
+                        if jb.gptr < jb.g_rd.shape[0] else None
+                if have_ready:
                     seq += 1
                     heappush(cal, (jb.free, _ADMIT, seq, jb))
-                elif jb.gated:
-                    trig = jb.gated[0][0]
-                    if trig < jb.free:
-                        trig = jb.free
+                elif nxt is not None:
+                    trig = nxt if nxt > jb.free else jb.free
                     seq += 1
                     heappush(cal, (trig, _ADMIT, seq, jb))
+
+        # -- heap mode: move gated flows with ready <= t to the admissible
+        # set.  Draining earlier than the next service event is sound: any
+        # scalar drain happens at a service time t' >= t and moves a
+        # superset, and pops always consider the whole admissible set.
+        if small:
+            def _drain(jb: _Job, t: float) -> None:
+                g = jb.gated
+                gp = jb.gptr
+                ng = len(g)
+                if gp >= ng or g[gp][0] > t:
+                    return
+                j = gp + 1
+                while j < ng and g[j][0] <= t:
+                    j += 1
+                rq = jb.readyq
+                if j - gp >= _DRAIN_BATCH_MIN:
+                    # bulk heappush: one heapify over the merged contents
+                    rq.extend((pr, op, i) for _r, pr, op, i in g[gp:j])
+                    heapify(rq)
+                else:
+                    for _r, pr, op, i in g[gp:j]:
+                        heappush(rq, (pr, op, i))
+                jb.gptr = j
+        else:
+            def _drain(jb: _Job, t: float) -> None:
+                gp = jb.gptr
+                grd = jb.g_rd
+                if gp >= grd.shape[0] or grd[gp] > t:
+                    return
+                j = int(grd.searchsorted(t, side="right"))
+                jb.readyq[jb.gated[gp:j]] = True   # one sliced scatter
+                jb.n_ready += j - gp
+                jb.gptr = j
 
         # -- bulk commit: vectorized saturated stretch on link ``L`` --------
         def _try_bulk(L: _Link, t0: float) -> int:
             """While every completion instantly re-admits (constant
             membership, constant share), each job's future completion marks
-            are prefix sums of its works.  Commit every completion strictly
-            before the first boundary (ready gate, hold flow, exhaustion,
-            or foreign calendar event) in one vectorized pass.  Returns the
-            number of flows committed."""
-            nonlocal n_done, g_wk, g_hd, g_lt
+            are prefix sums of its works — a pointer-mode job's marks walk
+            ``order[ptr:]``, a heap-mode job's walk its *resolved prefix*
+            (the admissible mask in (priority, op_id) order, valid until
+            the next gated ready time).  The per-job chains merge into one
+            (mark, flow)-sorted sequence whose completion times are a
+            single chained left fold — the exact float operations the
+            scalar spin performs, so bulk commits are bit-identical to
+            scalar processing.  Every completion strictly before the first
+            boundary (ready gate, gating boundary, hold flow, chain cap,
+            or foreign calendar event) commits in one vectorized pass.
+            Returns the number of flows committed."""
+            nonlocal n_done, g_wk, g_hd, g_lt, stale
             S0 = L.S
             share = L.share
             # drop lazily-invalidated projections so a stale early entry
@@ -440,23 +565,47 @@ class NetworkEngine:
             # cannot instantly re-admit, the very first completion is a
             # boundary and nothing can commit
             m_top, i_top = L.heap[0]
-            if t_cal <= t0 + (m_top - S0) / share:
+            t_first = t0 + (m_top - S0) / share
+            if t_cal <= t_first:
                 return 0
             jb_top = job_of[i_top]
-            p = jb_top.ptr
-            if (jb_top.gated is not None or p >= len(jb_top.order)
-                    or hd_col[jb_top.order[p - 1]]
-                    or jb_top.rdy[p] > t0 + (m_top - S0) / share):
+            if hd_col[i_top]:
                 return 0
+            if jb_top.gated is None:
+                p = jb_top.ptr
+                if p >= len(jb_top.order) or jb_top.rdy[p] > t_first:
+                    return 0
+            else:
+                _drain(jb_top, t0)
+                if not jb_top.n_ready:
+                    return 0
+            # every heap-mode job's gating boundary caps the whole window
+            # (commits stop at the earliest gate), so if any gate precedes
+            # the first completion the call cannot commit — an O(jobs)
+            # rejection that keeps gate-dense phases (jittered plans) cheap
+            for _m_x, i_x in L.heap:
+                jx = job_of[i_x]
+                if jx.gated is not None:
+                    _drain(jx, t0)
+                    if (jx.gptr < jx.g_rd.shape[0]
+                            and jx.g_rd[jx.gptr] <= t_first):
+                        L.bulk_skip = 4     # locally gate-dense: go scalar
+                        return 0
             if g_wk is None:
                 g_wk = np.asarray(wk_col)
                 g_hd = np.asarray(hd_col, dtype=bool)
                 g_lt = np.asarray(lt_col)
+            # no mark beyond this can commit (commit times are < t_cal), so
+            # chains truncate here before the merge sort — a truncation is
+            # just an earlier artificial boundary, never an arithmetic
+            # change, and the next call continues the same cumsum exactly
+            mark_limit = S0 + (t_cal - t0) * share
             chains = []
-            t_stop = t_cal
+            mark_segs = []
+            id_segs = []
             for m0, i0 in L.heap:
                 jb = job_of[i0]
-                if jb.gated is not None or jb.link is not L:
+                if jb.link is not L:
                     return 0
                 if jb.wk is None:
                     onp = jb.onp = np.asarray(jb.order, dtype=np.intp)
@@ -464,61 +613,146 @@ class NetworkEngine:
                     jb.rd = rd_np[onp]
                     jb.hd = g_hd[onp]
                     jb.lt = g_lt[onp]
-                ptr = jb.ptr
-                marks = np.empty(len(jb.order) - ptr + 1)
-                marks[0] = m0
-                marks[1:] = jb.wk[ptr:]
-                marks = np.cumsum(marks)        # exact left fold, like scalar
-                times = t0 + (marks - S0) / share
-                k = marks.shape[0] - 1          # future flows in the chain
-                if k:
-                    viol = ((jb.rd[ptr:] > times[:k])
-                            | jb.hd[ptr - 1:ptr + k - 1])
-                    nz = np.nonzero(viol)[0]
-                    v = int(nz[0]) + 1 if nz.size else k + 1
+                kcap = L.bulk_cap
+                if jb.gated is None:
+                    ptr = jb.ptr
+                    k = len(jb.order) - ptr
+                    if k > kcap:
+                        k = kcap
+                    ids = np.empty(k + 1, dtype=np.intp)
+                    ids[0] = i0
+                    ids[1:] = jb.onp[ptr:ptr + k]
+                    marks = np.empty(k + 1)
+                    marks[0] = m0
+                    marks[1:] = jb.wk[ptr:ptr + k]
+                    pos = None
                 else:
-                    v = 1
-                bt = times[v - 1]               # this job's boundary time
+                    # resolved prefix: the admissible mask in service order
+                    # (this job was already drained by the gate pre-check)
+                    pos = jb.readyq.nonzero()[0]
+                    k = pos.shape[0]
+                    if k > kcap:
+                        k = kcap
+                        pos = pos[:k]
+                    ids = np.empty(k + 1, dtype=np.intp)
+                    ids[0] = i0
+                    ids[1:] = jb.onp[pos]
+                    marks = np.empty(k + 1)
+                    marks[0] = m0
+                    marks[1:] = jb.wk[pos]
+                marks = marks.cumsum()          # exact left fold, like scalar
+                if marks.shape[0] > 8:
+                    kk = int(marks.searchsorted(mark_limit,
+                                                side="right")) + 2
+                    if kk < marks.shape[0]:
+                        marks = marks[:kk]
+                        ids = ids[:kk]
+                        if pos is not None:
+                            pos = pos[:kk - 1]
+                chains.append((jb, m0, i0, marks, ids, pos))
+                mark_segs.append(marks)
+                id_segs.append(ids)
+            # merge all chains into global service order (ties break on the
+            # flow index, exactly like the link heap's (mark, i) tuples),
+            # then chain completion times with the scalar spin's own
+            # arithmetic: t_{j} = t_{j-1} + (m_j - m_{j-1}) / share
+            M = np.concatenate(mark_segs)
+            I = np.concatenate(id_segs)
+            order_g = np.lexsort((I, M))
+            Ms = M[order_g]
+            d = np.empty_like(Ms)
+            d[0] = t_first
+            if Ms.shape[0] > 1:
+                d[1:] = (Ms[1:] - Ms[:-1]) / share
+            times_sorted = d.cumsum()
+            times_flat = np.empty_like(times_sorted)
+            times_flat[order_g] = times_sorted
+            t_stop = t_cal
+            metas = []
+            off = 0
+            for jb, m0, i0, marks, ids, pos in chains:
+                n_j = marks.shape[0]
+                times = times_flat[off:off + n_j]
+                off += n_j
+                k = n_j - 1                     # future flows in the chain
+                if jb.gated is None:
+                    ptr = jb.ptr
+                    if k:
+                        viol = ((jb.rd[ptr:ptr + k] > times[:k])
+                                | jb.hd[ptr - 1:ptr + k - 1])
+                        nz = viol.nonzero()[0]
+                        v = int(nz[0]) + 1 if nz.size else k + 1
+                    else:
+                        v = 1
+                    bt = times[v - 1]           # this job's boundary time
+                else:
+                    if k:
+                        hd_prev = g_hd[ids[:k]]
+                        nz = hd_prev.nonzero()[0]
+                        v = int(nz[0]) + 1 if nz.size else k + 1
+                        bt = times[v - 1]
+                        # gating boundary: a commit window reaching the
+                        # next gated ready time would let a fresh flow
+                        # preempt the resolved prefix
+                        gp = jb.gptr
+                        if gp < jb.g_rd.shape[0]:
+                            tg = jb.g_rd[gp]
+                            if tg < bt:
+                                bt = tg
+                    else:
+                        v = 1
+                        bt = times[0]
                 if bt < t_stop:
                     t_stop = bt
-                chains.append((jb, m0, i0, marks, times, v))
+                metas.append((jb, m0, i0, marks, times, v, ids, pos))
             total = 0
-            t_final = t0
-            s_final = S0
             entries = []
-            for jb, m0, i0, marks, times, v in chains:
-                c = int(np.searchsorted(times[:v], t_stop, side="left"))
+            for jb, m0, i0, marks, times, v, ids, pos in metas:
+                c = int(times[:v].searchsorted(t_stop, side="left"))
                 if c == 0:
                     entries.append((m0, i0))
                     continue
-                ptr = jb.ptr
                 tc = times[:c]
-                ids = np.empty(c, dtype=np.intp)
-                ids[0] = i0
+                idc = ids[:c]
                 if c > 1:
-                    ids[1:] = jb.onp[ptr:ptr + c - 1]
-                    start[ids[1:]] = tc[:-1]
-                wire[ids] = tc
-                end[ids] = tc + jb.lt[ptr - 1:ptr + c - 1]
-                contended[ids] = True
-                ia = jb.order[ptr + c - 1]      # the job's new active flow
+                    start[ids[1:c]] = tc[:-1]
+                wire[idc] = tc
+                if jb.gated is None:
+                    ptr = jb.ptr
+                    end[idc] = tc + jb.lt[ptr - 1:ptr + c - 1]
+                    ia = jb.order[ptr + c - 1]  # the job's new active flow
+                    jb.ptr = ptr + c
+                else:
+                    end[idc] = tc + g_lt[idc]
+                    ia = int(ids[c])
+                    # consume the committed prefix plus the new active flow
+                    jb.readyq[pos[:c]] = False
+                    jb.n_ready -= c
+                contended[idc] = True
                 tl = float(tc[-1])
                 start[ia] = tl
                 contended[ia] = True
-                jb.ptr = ptr + c
                 entries.append((float(marks[c]), ia))
                 total += c
-                if tl > t_final:
-                    t_final = tl
-                    s_final = float(marks[c - 1])
             if not total:
                 return 0
             L.heap = entries
             heapify(entries)
-            L.S = s_final
-            L.t_last = t_final
+            # final link state = exactly the scalar spin's after serving
+            # the last committed completion of the merged sequence
+            n_commit = int(times_sorted.searchsorted(t_stop, side="left"))
+            L.S = float(Ms[n_commit - 1])
+            L.t_last = float(times_sorted[n_commit - 1])
             L.version += 1
+            # geometric cap adaptation: big commits earn longer chains next
+            # call, near-empty windows shrink the per-call numpy work
+            nc = 2 * total
+            L.bulk_cap = (_BULK_CHAIN_CAP if nc > _BULK_CHAIN_CAP
+                          else nc if nc > 32 else 32)
+            if total < 4 * L.n:
+                L.bulk_skip = 64    # window too small to pay numpy setup
             n_done += total
+            stale = 0               # bulk-committed work is progress
             return total
 
         while n_done < n_total:
@@ -533,10 +767,17 @@ class NetworkEngine:
                 ver, L = ev[3], ev[4]
                 if ver != L.version or not L.n:
                     stale += 1      # lazily-invalidated projection
-                    if stale > 4 * n_total + 1000:
+                    if stale > stall_limit:
                         raise RuntimeError(
                             "event engine made no progress over "
                             f"{stale} events ({n_done}/{n_total} flows done)")
+                    if len(cal) > sweep_at:
+                        # batched stale sweep: one filter pass + heapify
+                        # beats popping invalidated projections one by one
+                        cal[:] = [e for e in cal if e[1] == _ADMIT
+                                  or e[3] == e[4].version]
+                        heapify(cal)
+                        sweep_at = max(256, 2 * len(cal))
                     continue
                 stale = 0
                 # ---- completion spin: serve this link's completions while
@@ -581,14 +822,19 @@ class NetworkEngine:
                             if p < len(jb.order) and jb.rdy[p] <= t:
                                 jb.ptr = p + 1
                                 readmitted = _admit(jb.order[p], jb, t)
-                        else:
-                            g = jb.gated
-                            while g and g[0][0] <= t:
-                                r, pr, op, k = heappop(g)
-                                heappush(jb.readyq, (pr, op, k))
+                        elif small:
+                            _drain(jb, t)
                             if jb.readyq:
-                                _, _, k = heappop(jb.readyq)
+                                k = heappop(jb.readyq)[2]
                                 readmitted = _admit(k, jb, t)
+                        else:
+                            _drain(jb, t)
+                            if jb.n_ready:
+                                # first set bit = best (priority, op_id)
+                                p = int(jb.readyq.argmax())
+                                jb.readyq[p] = False
+                                jb.n_ready -= 1
+                                readmitted = _admit(jb.order[p], jb, t)
                     if readmitted is None:
                         _schedule_admit(jb, t)
                     elif readmitted is not L:
@@ -600,10 +846,13 @@ class NetworkEngine:
                                        seq, readmitted.version, readmitted))
                     if not L.n:
                         break
-                    if not small and L.n > 1 and _try_bulk(L, t):
-                        t = L.t_last
-                        if not L.n:
-                            break
+                    if not small and L.n >= _BULK_MIN_ACTIVE:
+                        if L.bulk_skip:
+                            L.bulk_skip -= 1
+                        elif _try_bulk(L, t):
+                            t = L.t_last
+                            if not L.n:
+                                break
                     proj = t + (L.heap[0][0] - L.S) / L.share
                     if proj < t:
                         proj = t
@@ -618,7 +867,7 @@ class NetworkEngine:
             jb = ev[3]
             if jb.busy:
                 stale += 1          # superseded by an instant re-admission
-                if stale > 4 * n_total + 1000:
+                if stale > stall_limit:
                     raise RuntimeError(
                         "event engine made no progress over "
                         f"{stale} events ({n_done}/{n_total} flows done)")
@@ -627,7 +876,7 @@ class NetworkEngine:
                 stale += 1
                 _schedule_admit(jb, t)
                 continue
-            stale = 0
+            stale = 0               # a serviced admission trigger is progress
             admitted = None
             if jb.gated is None:
                 p = jb.ptr
@@ -637,15 +886,21 @@ class NetworkEngine:
                         admitted = _admit(jb.order[p], jb, t)
                     else:
                         _schedule_admit(jb, t)
-            else:
-                g = jb.gated
-                while g and g[0][0] <= t:
-                    r, pr, op, k = heappop(g)
-                    heappush(jb.readyq, (pr, op, k))
+            elif small:
+                _drain(jb, t)
                 if jb.readyq:
-                    _, _, k = heappop(jb.readyq)
+                    k = heappop(jb.readyq)[2]
                     admitted = _admit(k, jb, t)
-                elif g:
+                elif jb.gptr < len(jb.gated):
+                    _schedule_admit(jb, t)
+            else:
+                _drain(jb, t)
+                if jb.n_ready:
+                    p = int(jb.readyq.argmax())
+                    jb.readyq[p] = False
+                    jb.n_ready -= 1
+                    admitted = _admit(jb.order[p], jb, t)
+                elif jb.gptr < jb.g_rd.shape[0]:
                     _schedule_admit(jb, t)
             if admitted is not None:
                 seq += 1

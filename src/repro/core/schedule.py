@@ -45,7 +45,7 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Sequence, Tuple
 
-from repro.core.events import FlowSpec
+from repro.core.events import DEFAULT_JOB, FlowSpec
 
 DEFAULT_CHUNKS = 4
 
@@ -303,3 +303,34 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
             link=link, hold=hold, duration=lat + rail_work,
             rail=op.channel))
     return flows
+
+
+def clone_flows(flows: Sequence[FlowSpec], op_id_base: int, job: str, *,
+                old_job: str = DEFAULT_JOB) -> List[FlowSpec]:
+    """Relabel an already-lowered flow list for another identical job.
+
+    :func:`plan_to_flows` is pure in everything except ``job`` and
+    ``op_id_base``: two co-located jobs running the same plan under the
+    same cost model differ only in those labels.  Cloning skips the
+    cost-model calls and duration arithmetic entirely and the result is
+    bit-identical to a fresh ``plan_to_flows`` call — the same float
+    objects, relabeled — which is what lets ``simulate_contention`` lower
+    an n-job contention cell once instead of n times.  Rail lanes
+    (``job@r<k>``, stamped by :func:`plan_to_flows` under multi-rail
+    lowering) are relabeled consistently; job names not starting with
+    ``old_job`` are left untouched.
+    """
+    if op_id_base == 0 and job == old_job:
+        return list(flows)
+    shift = len(old_job)
+    names: dict = {}
+    new = tuple.__new__
+    out: List[FlowSpec] = []
+    for f in flows:
+        nm = names.get(f[5])
+        if nm is None:
+            nm = job + f[5][shift:] if f[5].startswith(old_job) else f[5]
+            names[f[5]] = nm
+        out.append(new(FlowSpec, (f[0] + op_id_base, f[1], f[2], f[3], f[4],
+                                  nm, f[6], f[7], f[8], f[9])))
+    return out

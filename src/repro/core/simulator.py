@@ -51,7 +51,7 @@ from repro.core.events import (DEFAULT_LINK, FlowResult, FlowSpec,
                                perturb_flows, run_flows)
 from repro.core.network_model import RingAllReduce, make_cost_model
 from repro.core.schedule import (CommPlan, assign_rails, canonical_scheduler,
-                                 lower_buckets, plan_to_flows)
+                                 clone_flows, lower_buckets, plan_to_flows)
 from repro.core.timeline import GradTimeline
 from repro.core.transport import Transport, get_transport
 
@@ -399,14 +399,23 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     jobs = []
     all_flows = []
     base = 0
+    # co-located jobs usually share one timeline object ([tl] * n_jobs):
+    # lower it once and relabel per job (clone_flows is bit-identical to a
+    # fresh plan_to_flows call), so an n-job cell costs one lowering, not n
+    lowered: dict = {}
     for j, tl in enumerate(timelines):
-        buckets = fuse_buckets(tl, comm)
-        plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
-                              for b in buckets], scheduler=sched, n_chunks=k)
-        plan = assign_rails(plan, n_rails, rail_policy)
-        flows = plan_to_flows(plan, cost, tr.per_tensor_overhead,
-                              job=f"job{j}", op_id_base=base,
-                              n_rails=n_rails)
+        got = lowered.get(id(tl))
+        if got is None:
+            buckets = fuse_buckets(tl, comm)
+            plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
+                                  for b in buckets], scheduler=sched,
+                                 n_chunks=k)
+            plan = assign_rails(plan, n_rails, rail_policy)
+            flows0 = plan_to_flows(plan, cost, tr.per_tensor_overhead,
+                                   op_id_base=0, n_rails=n_rails)
+            got = lowered[id(tl)] = (buckets, plan, flows0)
+        buckets, plan, flows0 = got
+        flows = clone_flows(flows0, base, f"job{j}")
         if jitter > 0.0:
             flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
         base += len(flows)

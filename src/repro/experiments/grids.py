@@ -101,6 +101,20 @@ _register(ExperimentSpec(
     bandwidth_gbps=(10.0, 25.0, 100.0), transport=("horovod_tcp",),
     scheduler=("fifo", "chunked"), n_jobs=(1, 2, 4, 8), sched_chunks=32))
 
+# xxl-contention (the heap-mode bulk-commit payoff): the large, contended,
+# scheduler-sensitive regime the gradient-compression follow-up identifies
+# as where scheduling actually matters — priority *and* chunked pipelines
+# at 64 chunks/bucket, up to 16 co-located jobs, with and without flush
+# jitter.  The 16-job VGG16 cells lower to >18k flows each (>10k/cell is
+# the grid's defining scale), which is only sweepable because heap-mode
+# (priority) jobs ride the same numpy bulk-commit fast path as pointer
+# mode.  Gated by artifacts/golden/xxl_contention_suite.json in CI.
+_register(ExperimentSpec(
+    name="xxl-contention", models=("resnet50", "vgg16"), n_servers=(8,),
+    bandwidth_gbps=(10.0, 25.0), transport=("horovod_tcp",),
+    scheduler=("priority", "chunked"), n_jobs=(1, 4, 16), sched_chunks=64,
+    jitter_ms=(0.0, 2.0), jitter_seed=2026))
+
 # Scenario axes (the follow-up literature's territory — what the paper's
 # single-NIC, no-straggler testbed could not measure).
 
@@ -134,6 +148,7 @@ SUITES: Dict[str, Tuple[str, ...]] = {
     "scheduler": ("scheduler-suite",),
     "paper-xl": ("xl-bandwidth", "xl-sched", "xl-contention"),
     "scenario": ("multirail", "straggler"),
+    "xxl": ("xxl-contention",),
 }
 
 

@@ -121,11 +121,20 @@ def _run_cell_batch(spec_d: Dict, cell_ds: Sequence[Dict]) -> List[Dict]:
     return [run_cell(spec, Cell.from_dict(d)) for d in cell_ds]
 
 
-def resolve_executor(executor: str, n_cells: int) -> str:
-    """``auto`` -> threads for small grids, processes for big ones."""
+def resolve_executor(executor: str, n_cells: int,
+                     workload: Optional[int] = None) -> str:
+    """``auto`` -> threads for small grids, processes for big ones.
+
+    ``workload`` (default: the plain cell count) is the grid's
+    :attr:`~repro.experiments.spec.ExperimentSpec.workload_units` — a
+    contention cell weighs ``n_jobs``-fold, since one n_jobs=16 cell runs
+    sixteen jobs' worth of flows through the engine.  Without the
+    weighting, a 48-cell grid of 10k-flow contention cells would be
+    GIL-serialized on threads purely because its *count* is small."""
     if executor != "auto":
         return executor
-    return "process" if n_cells >= PROCESS_THRESHOLD else "thread"
+    load = n_cells if workload is None else workload
+    return "process" if load >= PROCESS_THRESHOLD else "thread"
 
 
 def _batches(items: Sequence, size: int) -> List[Sequence]:
@@ -136,7 +145,7 @@ def run_spec(spec: ExperimentSpec, *, executor: str = "auto",
              max_workers: Optional[int] = None) -> Dict:
     """Expand and run one grid; returns the experiment record."""
     cells = spec.expand()
-    mode = resolve_executor(executor, len(cells))
+    mode = resolve_executor(executor, len(cells), spec.workload_units)
     if mode == "serial" or len(cells) <= 1:
         results = [run_cell(spec, c) for c in cells]
     elif mode == "process":

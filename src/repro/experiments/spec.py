@@ -63,6 +63,15 @@ class Cell:
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
 
+    @property
+    def weight(self) -> int:
+        """Scheduling weight: a contention cell runs ``n_jobs`` co-located
+        jobs through one engine call, so it costs roughly ``n_jobs`` plain
+        cells.  The runner's auto-executor sums these instead of counting
+        cells, so a small-by-count grid of 10k-flow contention cells still
+        lands on the process pool."""
+        return max(int(self.n_jobs), 1)
+
     def to_dict(self) -> Dict:
         return {a: getattr(self, a) for a in CELL_AXES
                 if _ELIDED_AT_DEFAULT.get(a, ...) != getattr(self, a)}
@@ -136,6 +145,16 @@ class ExperimentSpec:
                 * len(self.compression_ratio) * len(self.topology)
                 * len(self.scheduler) * len(self.n_jobs)
                 * len(self.n_rails) * len(self.jitter_ms))
+
+    @property
+    def workload_units(self) -> int:
+        """Sum of :attr:`Cell.weight` over the grid, without expanding it.
+
+        The executor-dispatch measure: every axis combination repeats once
+        per ``n_jobs`` value, so the sum factors into (combinations
+        without the contention axis) x (sum of per-value weights)."""
+        per_combo = sum(max(int(j), 1) for j in self.n_jobs)
+        return (self.n_cells // max(len(self.n_jobs), 1)) * per_combo
 
     # -- serialization -------------------------------------------------------
 

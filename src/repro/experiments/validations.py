@@ -174,6 +174,60 @@ def _xl_contention(cells: Sequence[Dict]) -> Check:
             "solo_cell_matches_simulate_bitwise": exact}
 
 
+def _xxl_contention(cells: Sequence[Dict]) -> Check:
+    """The 10k-flow priority/contention regime the heap-mode bulk commit
+    opens up.  Gated claims:
+
+    - fair-share contention only hurts, monotonically in ``n_jobs``, at
+      every (model, bandwidth, scheduler, jitter) point — including the
+      18k-flow 16-job VGG16 cells;
+    - at 64 chunks/bucket the priority schedule never *adds* overhead
+      over the chunked pipeline (same chunking, reordered): solo it may
+      win slightly, and under saturation the work-conserving link makes
+      them coincide up to the final-tail reordering;
+    - flush jitter is monotone for a *solo* job (the straggler-grid
+      claim at 64-chunk scale).  Under contention independent job
+      streams can delay competitors and *help* job 0, so monotonicity
+      is deliberately not claimed for n_jobs > 1;
+    - a solo unjittered cell is bit-exact with plain ``simulate`` — the
+      degenerate contention path stays on the engine's closed forms.
+    """
+    from repro.experiments.spec import axis_value
+    by = {(c["model"], c["bandwidth_gbps"], c["scheduler"],
+           axis_value(c, "n_jobs"), axis_value(c, "jitter_ms")): c
+          for c in cells}
+    jobs = sorted({k[3] for k in by})
+    over = {k: c["t_overhead"] for k, c in by.items()}
+    mono_jobs = all(over[(m, bw, s, a, jm)] <= over[(m, bw, s, b, jm)] + 1e-9
+                    for (m, bw, s, _, jm) in by
+                    for a, b in zip(jobs, jobs[1:]))
+    hurts = all(by[(m, bw, s, jobs[-1], jm)]["scaling_factor"]
+                < by[(m, bw, s, 1, jm)]["scaling_factor"] - 1e-6
+                for (m, bw, s, j, jm) in by if j == 1)
+    pri_le_chk = all(over[(m, bw, "priority", j, jm)]
+                     <= over[(m, bw, "chunked", j, jm)] + 1e-4
+                     for (m, bw, s, j, jm) in by if s == "chunked")
+    jits = sorted({k[4] for k in by})
+    solo_jit = all(over[(m, bw, s, 1, a)] <= over[(m, bw, s, 1, b)] + 1e-9
+                   for (m, bw, s, j, _) in by if j == 1
+                   for a, b in zip(jits, jits[1:]))
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    solo = [c for c in cells if axis_value(c, "n_jobs") == 1
+            and axis_value(c, "jitter_ms") == 0.0]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"], scheduler=c["scheduler"],
+                         n_chunks=64).t_sync == c["t_sync"]
+                for c in solo)
+    return {"overhead_monotone_in_n_jobs": mono_jobs,
+            "contention_hurts_at_16_jobs": hurts,
+            "priority64_overhead_le_chunked64": pri_le_chk,
+            "solo_overhead_monotone_in_jitter": solo_jit,
+            "solo_cell_matches_simulate_bitwise": exact}
+
+
 def _multirail(cells: Sequence[Dict]) -> Check:
     """The multi-rail claims the scenario golden suite gates.
 
@@ -269,6 +323,7 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "xl-bandwidth": _xl_bandwidth,
     "xl-sched": _xl_sched,
     "xl-contention": _xl_contention,
+    "xxl-contention": _xxl_contention,
     "multirail": _multirail,
     "straggler": _straggler,
 }

@@ -2,14 +2,18 @@
 
 Property tests pit ``repro.core.events.NetworkEngine`` against the seed
 loop on randomized flow sets — multi-job, fractional link capacities,
-``hold`` vs pipelined, duplicate ready times — plus the closed-form fifo
-fast path against the engine, and the progress-based stall detector.
+``hold`` vs pipelined, duplicate ready times, and priority-scheduled
+(heap-mode) plans — plus the closed-form fifo fast path against the
+engine, and the progress-based stall detector.
 
 Equivalence contract (documented in ``events.py``):
 
 - all times (start, wire_end, end) agree within 1e-9 relative; uncontended
   and ``hold`` flows agree *bit-for-bit* (both engines use the same closed
   forms there);
+- the numpy bulk-commit path (pointer *and* heap mode) is **bit-identical**
+  to the scalar event loop: disabling it via ``_BULK_MIN_ACTIVE`` must not
+  change a single bit of any result;
 - ``contended`` flags agree except on zero-duration overlaps, where the
   seed flagged flows co-admitted at an instant one of them already
   completes; the heap engine only counts sharing of nonzero duration, so
@@ -22,7 +26,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 from _reference_engine import run_reference_flows
 
-from repro.core.events import FlowSpec, run_flows
+from repro.core.events import FlowSpec, perturb_flows, run_flows
 from repro.core.schedule import lower_buckets, plan_to_flows
 
 
@@ -118,6 +122,172 @@ def test_known_seeds_cover_contention():
     flows = _random_flows(60, 4, 1, seed=7, hold_p=0.0)
     _, new = _assert_equivalent(flows)
     assert any(r.contended for r in new)
+
+
+# ---------------------------------------------------------------------------
+# heap-mode bulk commit: priority plans vs the reference, and the
+# bulk-vs-scalar bit-identity contract
+# ---------------------------------------------------------------------------
+
+class _LinearCost:
+    """Deterministic toy cost model for plan lowering in tests."""
+
+    def time(self, size):
+        return size / 1e9 + 5e-5
+
+    def wire_time(self, size):
+        return size / 1e9
+
+
+def _priority_plan_flows(n_jobs, n_buckets, n_chunks, seed, *, jitter=0.0,
+                         dup_flush=False):
+    """Contending jobs under the *priority* scheduler: every job's ready
+    times regress along service order, so all jobs run heap-mode
+    admission.  Chunks of one bucket share a priority (duplicates) and a
+    flush time (equal ready bursts) by construction; ``dup_flush``
+    additionally collapses flush times across buckets."""
+    rng = np.random.default_rng(seed)
+    flows, base = [], 0
+    for j in range(n_jobs):
+        ready = np.sort(rng.uniform(0.0, 0.05, n_buckets))
+        if dup_flush:
+            ready = np.repeat(ready[::2], 2)[:n_buckets]
+        buckets = [(float(t), float(sz), 1) for t, sz in
+                   zip(ready, rng.uniform(1e5, 5e7, n_buckets))]
+        plan = lower_buckets(buckets, scheduler="priority",
+                             n_chunks=n_chunks)
+        fl = plan_to_flows(plan, _LinearCost(), 1e-6, job=f"j{j}",
+                           op_id_base=base)
+        if jitter > 0.0:
+            fl = perturb_flows(fl, jitter, seed ^ 0x5A5A, stream=j)
+        base += len(fl)
+        flows.extend(fl)
+    return flows
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_jobs=st.integers(2, 6), n_buckets=st.integers(2, 8),
+       n_chunks=st.integers(2, 16), seed=st.integers(0, 10_000),
+       dup_flush=st.booleans())
+def test_priority_plans_match_reference(n_jobs, n_buckets, n_chunks, seed,
+                                        dup_flush):
+    flows = _priority_plan_flows(n_jobs, n_buckets, n_chunks, seed,
+                                 dup_flush=dup_flush)
+    _assert_equivalent(flows)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_jobs=st.integers(2, 5), n_buckets=st.integers(2, 6),
+       n_chunks=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_priority_plans_with_jitter_match_reference(n_jobs, n_buckets,
+                                                    n_chunks, seed):
+    flows = _priority_plan_flows(n_jobs, n_buckets, n_chunks, seed,
+                                 jitter=0.01)
+    _assert_equivalent(flows)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_jobs=st.integers(2, 5), n_buckets=st.integers(2, 6),
+       seed=st.integers(0, 10_000),
+       cap=st.sampled_from([0.5, 0.75, 2.0]))
+def test_priority_plans_fractional_capacity(n_jobs, n_buckets, seed, cap):
+    flows = _priority_plan_flows(n_jobs, n_buckets, 8, seed)
+    _assert_equivalent(flows, {"nic": cap})
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_jobs=st.integers(2, 4), n_buckets=st.integers(2, 6),
+       n_rails=st.integers(2, 3), seed=st.integers(0, 10_000))
+def test_priority_plans_on_rails_match_reference(n_jobs, n_buckets,
+                                                 n_rails, seed):
+    """Heap-mode jobs on a multi-rail link: rails must still behave as
+    independently named links when every lane runs priority admission."""
+    rng = np.random.default_rng(seed ^ 0x77)
+    flows = [f._replace(rail=int(rng.integers(0, n_rails)))
+             for f in _priority_plan_flows(n_jobs, n_buckets, 8, seed)]
+    try:
+        ref = run_reference_flows(
+            [f._replace(link=f"{f.link}#r{f.rail}") for f in flows],
+            max_iters_factor=200)
+    except RuntimeError:
+        pytest.skip("seed engine did not converge on this input")
+    new = run_flows(flows, rails={"nic": n_rails})
+    for a, b in zip(ref, new):
+        scale = max(abs(a.end), abs(b.end), 1e-9)
+        assert abs(a.end - b.end) <= 1e-9 * scale + 1e-15
+        assert a.contended == b.contended
+
+
+def test_priority_plans_match_reference_known_seeds():
+    """Deterministic twin of the property tests above (runs without
+    hypothesis): contending priority plans — duplicate priorities and
+    equal ready bursts by construction — against the seed engine, at
+    sizes that exercise the columnar heap-mode setup and the bulk path,
+    with and without jitter and fractional capacity."""
+    cases = [
+        dict(n_jobs=4, n_buckets=6, n_chunks=12, seed=2),
+        dict(n_jobs=6, n_buckets=8, n_chunks=16, seed=13, dup_flush=True),
+        dict(n_jobs=3, n_buckets=5, n_chunks=8, seed=99, jitter=0.01),
+    ]
+    for kw in cases:
+        flows = _priority_plan_flows(**kw)
+        assert len(flows) > 64      # columnar setup + bulk, not small-plan
+        _, new = _assert_equivalent(flows)
+        assert any(r.contended for r in new)
+    flows = _priority_plan_flows(4, 6, 10, seed=21)
+    _assert_equivalent(flows, {"nic": 0.5})
+
+
+def _bulk_disabled(monkeypatch, flows, capacities=None):
+    import repro.core.events as ev
+    monkeypatch.setattr(ev, "_BULK_MIN_ACTIVE", 10**9)
+    out = run_flows(flows, capacities)
+    monkeypatch.undo()
+    return out
+
+
+@pytest.mark.parametrize("scheduler", ["chunked", "priority"])
+def test_bulk_commit_bit_identical_to_scalar(monkeypatch, scheduler):
+    """The acceptance contract: committing a saturated stretch through
+    the vectorized bulk path must produce the same bits as serving every
+    event through the scalar loop — for pointer mode (chunked) and heap
+    mode (priority) alike.  The merged chained-cumsum time arithmetic is
+    what makes this exact; a tolerance here would hide regressions."""
+    flows, base = [], 0
+    rng = np.random.default_rng(11)
+    for j in range(6):
+        ready = np.sort(rng.uniform(0.0, 0.02, 12))
+        buckets = [(float(t), float(sz), 1) for t, sz in
+                   zip(ready, rng.uniform(1e6, 5e7, 12))]
+        plan = lower_buckets(buckets, scheduler=scheduler, n_chunks=24)
+        fl = plan_to_flows(plan, _LinearCost(), 1e-6, job=f"j{j}",
+                           op_id_base=base)
+        base += len(fl)
+        flows.extend(fl)
+    assert len(flows) > 1000        # far above the small-plan threshold
+    with_bulk = run_flows(flows)
+    scalar = _bulk_disabled(monkeypatch, flows)
+    assert with_bulk == scalar
+    assert any(r.contended for r in with_bulk)
+
+
+def test_bulk_commit_bit_identical_with_jitter(monkeypatch):
+    flows = _priority_plan_flows(8, 10, 16, seed=3, jitter=0.005)
+    assert run_flows(flows) == _bulk_disabled(monkeypatch, flows)
+
+
+def test_numpy_setup_bit_identical_to_small_setup_on_bulk_workload(
+        monkeypatch):
+    """Small-plan (plain lists, never bulk) vs columnar (numpy + bulk)
+    setups on a workload where bulk genuinely engages: with the chained
+    bulk arithmetic the two paths are bit-identical end to end."""
+    import repro.core.events as ev
+    flows = _priority_plan_flows(6, 8, 16, seed=9)
+    numpy_path = run_flows(flows)
+    monkeypatch.setattr(ev, "_SMALL_PLAN_MAX_FLOWS", 10**9)
+    small_path = run_flows(flows)
+    monkeypatch.undo()
+    assert numpy_path == small_path
 
 
 # ---------------------------------------------------------------------------
@@ -356,8 +526,47 @@ def test_serialized_closed_form_matches_python_loop():
 
 
 # ---------------------------------------------------------------------------
-# stall detection (satellite bugfix: no iteration-count heuristic)
+# stall detection (satellite bugfix: no iteration-count heuristic, and the
+# no-progress counter resets on ANY committed work)
 # ---------------------------------------------------------------------------
+
+def test_stall_counter_resets_on_committed_work(monkeypatch):
+    """Regression for the stall-detector accounting: the ``stale`` counter
+    must reset on any committed work (an admission, a served completion,
+    a bulk commit), so stale calendar pops interleaved with real progress
+    can never accumulate toward the bound.  With resets in place, a
+    heavily contended priority run keeps the high-water mark in single
+    digits — so it must survive a bound tightened far below the event
+    count (64 here vs ~18k events); without them, bursts of
+    lazily-invalidated projections would sum across the run and trip."""
+    import repro.core.events as ev
+    flows = []
+    base = 0
+    for j in range(8):
+        for b in range(18):
+            for c in range(32):
+                flows.append(FlowSpec(
+                    op_id=base, ready=0.01 * b, work=1e-4, latency=1e-5,
+                    priority=float(17 - b), job=f"job{j}"))
+                base += 1
+    monkeypatch.setattr(ev, "_STALL_FACTOR", 0)
+    monkeypatch.setattr(ev, "_STALL_BASE", 64)
+    res = run_flows(flows)
+    assert len(res) == len(flows)
+
+
+def test_stall_detector_still_fires(monkeypatch):
+    """The tightened accounting must not lobotomize the detector: with a
+    zero bound, the first genuinely stale pop (here: the superseded
+    projections of a many-job admission burst) still raises."""
+    import repro.core.events as ev
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1e-3 + i * 1e-9,
+                      job=f"j{i % 400}") for i in range(800)]
+    monkeypatch.setattr(ev, "_STALL_FACTOR", 0)
+    monkeypatch.setattr(ev, "_STALL_BASE", 0)
+    with pytest.raises(RuntimeError, match="no progress"):
+        run_flows(flows)
+
 
 def test_heavily_contended_multi_job_completes():
     """The seed's ``10 * n + 100`` convergence heuristic was a guess; the

@@ -85,6 +85,46 @@ def test_auto_executor_resolution():
         assert resolve_executor(mode, 10_000) == mode
 
 
+def test_auto_executor_weighs_contention_cells():
+    """A grid of few-but-heavy contention cells must land on the process
+    pool: the dispatch measure is workload units (n_jobs-weighted cells),
+    not the raw cell count."""
+    from repro.experiments.runner import PROCESS_THRESHOLD, resolve_executor
+    # raw count below the threshold, workload far above it
+    assert resolve_executor("auto", 8, workload=8 * 16) == "process"
+    assert resolve_executor("auto", 8, workload=8) == "thread"
+
+    heavy = ExperimentSpec(name="t", models=("vgg16",), n_servers=(8,),
+                           bandwidth_gbps=(10.0, 25.0),
+                           scheduler=("priority", "chunked"),
+                           n_jobs=(1, 4, 16), jitter_ms=(0.0, 2.0))
+    assert heavy.n_cells == 24 < PROCESS_THRESHOLD
+    assert heavy.workload_units == 8 * 21 >= PROCESS_THRESHOLD
+    cells = heavy.expand()
+    assert sum(c.weight for c in cells) == heavy.workload_units
+    assert {c.weight for c in cells} == {1, 4, 16}
+
+
+def test_xxl_contention_grid_registered_and_gated():
+    """The 10k-flow grid: registered, validated, suite-resolvable, and
+    actually at the scale its name claims (>10k flows in the worst cell:
+    18 VGG16 buckets x 64 chunks x 16 jobs)."""
+    from repro.experiments.validations import VALIDATORS
+    spec = GRIDS["xxl-contention"]
+    assert spec.name in VALIDATORS, "gated grid must carry claim checks"
+    assert grids.resolve("xxl")[0] is spec
+    assert max(spec.n_jobs) == 16 and spec.sched_chunks == 64
+    assert "priority" in spec.scheduler
+    assert spec.jitter_seed != 0
+    from repro.core.simulator import fuse_buckets
+    from repro.core.timeline import from_cnn
+    from repro.configs.base import CommConfig
+    n_buckets = len(fuse_buckets(from_cnn("vgg16"), CommConfig(
+        fusion_buffer_mb=spec.fusion_buffer_mb,
+        timeout_ms=spec.timeout_ms)))
+    assert n_buckets * spec.sched_chunks * max(spec.n_jobs) > 10_000
+
+
 def test_contention_axis_runs_and_matches_simulate_contention():
     from repro.core.simulator import simulate_contention
     from repro.core.timeline import from_cnn

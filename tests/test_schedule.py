@@ -365,6 +365,56 @@ def test_contention_two_jobs_slower_than_alone():
                for tl, r in zip(tls, shared))
 
 
+def test_clone_flows_bit_identical_to_plan_to_flows():
+    """simulate_contention's one-lowering-per-timeline reuse rests on
+    this: relabeling a lowered flow list must equal a fresh
+    ``plan_to_flows`` call for that job, bit for bit — including rail
+    lanes, whose ``job@r<k>`` names must be relabeled consistently."""
+    from repro.core.schedule import assign_rails, clone_flows
+    tl = from_cnn("vgg16")
+    tr = get_transport("horovod_tcp")
+    cost = RingAllReduce(64, tr.effective(25 * GBPS), AddEst.v100())
+    buckets = [(b.flush_time, b.size, b.n_tensors)
+               for b in fuse_buckets(tl, CommConfig())]
+    for n_rails in (1, 3):
+        plan = assign_rails(lower_buckets(buckets, scheduler="priority",
+                                          n_chunks=8), n_rails)
+        base_flows = plan_to_flows(plan, cost, tr.per_tensor_overhead,
+                                   n_rails=n_rails)
+        for j, op_base in ((0, 0), (3, 517)):
+            want = plan_to_flows(plan, cost, tr.per_tensor_overhead,
+                                 job=f"job{j}", op_id_base=op_base,
+                                 n_rails=n_rails)
+            got = clone_flows(base_flows, op_base, f"job{j}")
+            assert got == want
+    # the degenerate clone returns an equal list without relabeling work
+    assert clone_flows(base_flows, 0, "job0") == base_flows
+
+
+def test_contention_reuses_one_lowering_per_timeline():
+    """An n-job cell over one shared timeline object must lower once: the
+    cost model is consulted a constant number of times per op, not once
+    per job per op."""
+    calls = {"n": 0}
+
+    class _CountingCost:
+        def time(self, size):
+            calls["n"] += 1
+            return size / 1e9 + 1e-4
+
+        def wire_time(self, size):
+            return size / 1e9
+
+    from repro.core.schedule import clone_flows
+    buckets = [(0.001 * i, 1e6, 1) for i in range(10)]
+    plan = lower_buckets(buckets, scheduler="priority", n_chunks=4)
+    base_flows = plan_to_flows(plan, _CountingCost(), 0.0)
+    lowered_calls = calls["n"]
+    for j in range(1, 8):
+        clone_flows(base_flows, j * len(base_flows), f"job{j}")
+    assert calls["n"] == lowered_calls, "cloning must not re-price ops"
+
+
 # ---------------------------------------------------------------------------
 # simulator <-> runtime parity
 # ---------------------------------------------------------------------------

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""cProfile one grid cell and dump the hottest functions.
+
+The sweep engine's perf trajectory is tracked by
+``benchmarks/sweep_bench.py``; when a number there moves, this tool says
+*where* the time went.  It resolves a registered grid (or suite), expands
+its cells, runs one cell under ``cProfile``, and prints the top functions
+by cumulative time — the view that pins whether a regression lives in the
+event engine, the lowering, or the experiment layer.
+
+Usage::
+
+    python tools/profile_engine.py --grid xxl-contention --cell 47
+    python tools/profile_engine.py --grid paper-fig3 --cell 0 --top 30
+    python tools/profile_engine.py --grid xxl-contention --list
+
+``--cell`` indexes the concatenation of every spec's expanded cells when
+the name resolves to a suite.  ``--repeat`` runs the cell several times
+under one profile so short cells rise above interpreter noise; the first
+(unprofiled) run warms timeline caches, so the profile shows steady-state
+cost, not import/build cost.
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import sys
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+
+def _cells(grid: str) -> List[Tuple]:
+    from repro.experiments import grids
+    out = []
+    for spec in grids.resolve(grid):
+        out.extend((spec, cell) for cell in spec.expand())
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/profile_engine.py",
+        description="cProfile one cell of a registered grid")
+    ap.add_argument("--grid", required=True,
+                    help="registered grid or suite name (see "
+                         "`python -m repro.experiments list`)")
+    ap.add_argument("--cell", type=int, default=0,
+                    help="cell index into the expanded grid (default 0)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="how many functions to print (default 20)")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=("cumulative", "tottime", "ncalls"),
+                    help="pstats sort key (default cumulative)")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="profiled repetitions of the cell (default 3)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the grid's cells with indices and exit")
+    args = ap.parse_args(argv)
+
+    cells = _cells(args.grid)
+    if args.list:
+        for i, (spec, cell) in enumerate(cells):
+            print(f"{i:4d}  {spec.name}  {cell.to_dict()}")
+        return 0
+    if not 0 <= args.cell < len(cells):
+        print(f"--cell {args.cell} out of range: {args.grid} has "
+              f"{len(cells)} cells (use --list)")
+        return 2
+
+    from repro.experiments.runner import run_cell
+    spec, cell = cells[args.cell]
+    print(f"profiling {spec.name} cell {args.cell}: {cell.to_dict()} "
+          f"(x{args.repeat})")
+    run_cell(spec, cell)            # warm timeline/transport caches
+    prof = cProfile.Profile()
+    prof.enable()
+    for _ in range(max(args.repeat, 1)):
+        run_cell(spec, cell)
+    prof.disable()
+    stats = pstats.Stats(prof)
+    stats.sort_stats(args.sort).print_stats(args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
