@@ -1,15 +1,63 @@
-"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale only;
-the derived column reports achieved GB/s to compare against the ref path).
+"""Kernel micro-benchmarks and the codec cost calibration.
+
+Two modes:
+
+- default: the original micro-bench table (interpret-mode on CPU:
+  correctness-scale only; the derived column reports achieved GB/s to
+  compare against the ref path);
+- ``--calibrate``: measure the compression kernels against a *same-tiling
+  Pallas copy probe* and emit the codec calibration table consumed by
+  ``repro.core.codec`` (committed as ``artifacts/bench/BENCH_codec.json``).
+
+Calibration records **probe-normalized passes**, not wall time: each codec
+stage's time is divided by the copy probe's time on the same input, run
+through the same ``pallas_call`` tiling in the same mode — machine speed,
+interpret-mode overhead, and grid bookkeeping all cancel in the ratio.
+The simulator then prices a stage as ``passes`` sweeps of memory traffic
+at the modeled device's bandwidth (see ``Codec.encode_seconds``), the same
+analytic idiom as ``AddEst``.  Never compare interpret-mode Pallas against
+jitted XLA here: that ratio measures the interpreter (1000x), not the
+kernel.
+
+Usage::
+
+    python -m benchmarks.kernel_bench                    # micro-bench table
+    python -m benchmarks.kernel_bench --calibrate \
+        --out artifacts/bench/BENCH_codec.json           # refresh the table
+    python -m benchmarks.kernel_bench --calibrate --quick \
+        --check artifacts/bench/BENCH_codec.json         # CI gate
+
+With ``--check``, exits non-zero when a freshly measured pass count drifts
+more than :data:`DRIFT_FACTOR` x from the committed table, or a codec
+kernel in ``repro.kernels.quantize`` has no table entry.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import re
+import sys
 import time
-from typing import Dict, List
+from pathlib import Path
+from typing import Dict, List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from repro.kernels import ops, ref
+from repro.kernels import quantize as _q
+
+KIND = "repro-codec-bench"
+SCHEMA_VERSION = 1
+DRIFT_FACTOR = 2.0
+DEFAULT_OUT = "BENCH_codec.json"
+DEFAULT_TABLE = REPO_ROOT / "artifacts" / "bench" / "BENCH_codec.json"
+
+_CODEC_KERNEL_RE = re.compile(r"^quantize_(\w+)_2d$")
 
 
 def _bench(fn, *args, repeats: int = 3) -> float:
@@ -41,3 +89,201 @@ def run() -> List[Dict]:
         gbps = n * 4 / (us / 1e6) / 1e9
         rows.append(dict(name=name, us_per_call=us, derived=f"{gbps:.2f}GB/s"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# codec cost calibration
+# ---------------------------------------------------------------------------
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def probe_copy_2d(x: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """The calibration probe: a Pallas copy with the exact tiling of the
+    quantize kernels (one read + one write per element, same grid)."""
+    R = x.shape[0]
+    grid = (R // _q.ROW_TILE,)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((_q.ROW_TILE, _q.BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_q.ROW_TILE, _q.BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, _q.BLOCK), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def kernel_codec_names() -> List[str]:
+    """Codec names implied by the kernels in ``repro.kernels.quantize``:
+    every ``quantize_<name>_2d`` entry point plus ``ternarize_2d``.  The
+    ``--check`` gate fails if any of these is missing from the committed
+    table, so a new compression kernel cannot land unpriced."""
+    names = []
+    for attr in dir(_q):
+        m = _CODEC_KERNEL_RE.match(attr)
+        if m and not attr.startswith("dequantize"):
+            names.append(m.group(1))
+    if hasattr(_q, "ternarize_2d"):
+        names.append("ternary")
+    return sorted(set(names))
+
+
+def calibrate(quick: bool = False) -> Dict:
+    """Measure probe-normalized pass counts for every codec stage.
+
+    Quick and full mode use the SAME input size and differ only in
+    repeats: interpret-mode per-grid-step overhead is not linear in the
+    grid, so a pass ratio is only comparable against the committed table
+    when measured on the same shape — the ``--check`` drift gate depends
+    on that.  Fixed per-call costs (the DGC threshold estimate, kernel
+    launch) are deliberately excluded from the streaming passes; the
+    simulator prices them as the per-bucket launch overhead.
+    """
+    from repro.core.addest import V100_LAUNCH_OVERHEAD, V100_MEM_BW
+    from repro.core.codec import PROBE_BYTES_PER_BYTE
+    from repro.kernels import topk_mask as _tm
+
+    n = 1 << 18                                 # multiple of BLOCK*ROW_TILE
+    repeats = 3 if quick else 9
+    interpret = ops._interpret()
+    x = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
+    rows, _ = ops._to_rows(x)
+
+    probe = jax.jit(lambda r: probe_copy_2d(r, interpret=interpret))
+    probe_us = _bench(probe, rows, repeats=repeats)
+
+    q8 = jax.jit(lambda r: _q.quantize_int8_2d(r, interpret=interpret))
+    qv, sv = q8(rows)
+    dq8 = jax.jit(lambda q, s: _q.dequantize_int8_2d(q, s,
+                                                     interpret=interpret))
+    tern = jax.jit(lambda r: _q.ternarize_2d(r, interpret=interpret))
+    tv, tsv = tern(rows)
+    # top-k encode = the streaming Pallas mask kernel; the threshold is
+    # estimated once per bucket from samples (fixed cost, not a pass)
+    thr = ref.topk_threshold(x[::16], 1.0 / 8.0)
+    topk = jax.jit(lambda r: _tm.topk_mask_2d(r, thr, interpret=interpret))
+
+    stages = {
+        "int8": {
+            "encode_us": _bench(q8, rows, repeats=repeats),
+            "decode_us": _bench(dq8, qv, sv, repeats=repeats),
+        },
+        "ternary": {
+            "encode_us": _bench(tern, rows, repeats=repeats),
+            # decode is a scale-multiply; ops.deternarize reuses the
+            # int8 dequant kernel, so measure exactly that
+            "decode_us": _bench(dq8, tv, tsv, repeats=repeats),
+        },
+        "topk": {
+            "encode_us": _bench(topk, rows, repeats=repeats),
+            # decode scatters kept values into a zeroed buffer — one
+            # streaming pass; the probe itself is that kernel
+            "decode_us": probe_us,
+        },
+    }
+    codecs = {}
+    for name, t in stages.items():
+        codecs[name] = {
+            "encode_us": round(t["encode_us"], 1),
+            "decode_us": round(t["decode_us"], 1),
+            "encode_passes": round(t["encode_us"] / probe_us, 3),
+            "decode_passes": round(t["decode_us"] / probe_us, 3),
+        }
+    return {
+        "kind": KIND,
+        "schema_version": SCHEMA_VERSION,
+        "quick": quick,
+        "interpret": interpret,
+        "n_bytes": n * 4,
+        "probe_us": round(probe_us, 1),
+        "device_model": {
+            "name": "v100",
+            "mem_bw": V100_MEM_BW,
+            "launch_overhead": V100_LAUNCH_OVERHEAD,
+            "probe_bytes_per_byte": PROBE_BYTES_PER_BYTE,
+        },
+        "codecs": codecs,
+    }
+
+
+def check_table(fresh: Dict, table_path: Path) -> List[str]:
+    """CI gate: committed table vs a fresh measurement + kernel coverage."""
+    try:
+        committed = json.loads(table_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read table {table_path}: {e}"]
+    if committed.get("kind") != KIND:
+        return [f"{table_path} is not a {KIND}"]
+    failures = []
+    have = committed.get("codecs", {})
+    for name in kernel_codec_names():
+        if name not in have:
+            failures.append(
+                f"kernel codec {name!r} (repro.kernels.quantize) has no "
+                f"entry in {table_path.name} — re-run --calibrate")
+    for name, entry in fresh["codecs"].items():
+        if name not in have:
+            failures.append(
+                f"measured codec {name!r} missing from {table_path.name}")
+            continue
+        for stage in ("encode_passes", "decode_passes"):
+            old, new = have[name][stage], entry[stage]
+            lo, hi = sorted((old, new))
+            if lo <= 0 or hi / lo > DRIFT_FACTOR:
+                failures.append(
+                    f"{name}.{stage} drifted >{DRIFT_FACTOR}x: committed "
+                    f"{old} vs measured {new} — kernels changed without "
+                    f"re-running --calibrate?")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.kernel_bench",
+                                 description=__doc__)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="emit the codec cost table instead of micro-bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller input / fewer reps (CI)")
+    ap.add_argument("--out", default=None,
+                    help=f"calibration JSON path (default {DEFAULT_OUT})")
+    ap.add_argument("--check", default=None,
+                    help="committed table to gate against "
+                         f"(e.g. {DEFAULT_TABLE.relative_to(REPO_ROOT)})")
+    args = ap.parse_args(argv)
+
+    if not args.calibrate:
+        for row in run():
+            print(f"{row['name']:24s} {row['us_per_call']:10.1f} us  "
+                  f"{row['derived']}")
+        return 0
+
+    result = calibrate(quick=args.quick)
+    print(f"probe: {result['probe_us']:.1f} us over "
+          f"{result['n_bytes'] >> 20} MiB "
+          f"(interpret={result['interpret']})")
+    for name, c in sorted(result["codecs"].items()):
+        print(f"{name:8s} encode {c['encode_passes']:.3f} passes "
+              f"({c['encode_us']:.1f} us)  decode {c['decode_passes']:.3f} "
+              f"passes ({c['decode_us']:.1f} us)")
+
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(result, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {out}")
+
+    if args.check:
+        failures = check_table(result, Path(args.check))
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}")
+            return 1
+        print(f"calibration OK vs {args.check} "
+              f"(drift gate {DRIFT_FACTOR}x, codecs "
+              f"{', '.join(kernel_codec_names())} covered)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

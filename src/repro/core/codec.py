@@ -1,0 +1,254 @@
+"""Gradient-compression codecs as priced pipeline stages.
+
+The paper's §3.2 what-if models compression as a byte divisor on the wire
+term — ``compression_ratio`` in :mod:`repro.core.network_model`.  The
+follow-up literature (Agarwal et al., "Beyond Throughput and Compression
+Ratios") shows that shortcut flips the conclusion once encode/decode
+compute enters the picture, so this module makes a codec a first-class
+cost object: a wire ratio (what the bytes shrink to) **plus** calibrated
+encode/decode compute costs, lowered by
+:func:`repro.core.schedule.plan_to_flows` into an encode -> wire -> decode
+pipeline per :class:`~repro.core.schedule.CommOp`.
+
+Codecs (``name[:param]`` strings, parsed by :func:`get_codec`):
+
+- ``none``         identity; zero cost, ratio 1 — bit-exact with a build
+                   that never heard of codecs;
+- ``ratio[:r]``    the *parametric byte divisor*: wire ratio ``r`` with
+                   **zero** compute cost.  This is the deprecated
+                   ``NetworkModel.compression_ratio`` float reborn as a
+                   codec — legacy ``compression_ratio=r`` calls route
+                   through it and reproduce bit-identically;
+- ``int8``         per-256-block absmax int8 quantization — the Pallas
+                   kernel pair ``quantize_int8_2d``/``dequantize_int8_2d``
+                   in :mod:`repro.kernels.quantize`;
+- ``ternary``      TernGrad ternarization (``ternarize_2d``), wire format
+                   2 bits/element packed plus a per-block scale;
+- ``topk[:r]``     DGC-style magnitude sparsification to a requested wire
+                   ratio ``r`` (``topk_sparsify`` estimates the threshold
+                   from samples), costs calibrated off the top-k kernel.
+
+Cost model: encode/decode are element-wise streaming kernels, so their
+device-scale cost follows the same analytic idiom as
+:class:`~repro.core.addest.AddEst` — a kernel-launch overhead plus
+*memory passes* over the gradient bytes at the modeled device's memory
+bandwidth (V100, matching the paper's testbed).  The pass counts are
+**measured**, not guessed: ``benchmarks/kernel_bench.py --calibrate``
+times the real Pallas kernels against a same-tiling copy-kernel probe
+(machine speed cancels in the ratio) and writes the committed calibration
+table ``artifacts/bench/BENCH_codec.json``; CI re-derives the table in
+``--quick`` interpret mode and fails on >2x drift or a kernel codec
+missing from it.  :data:`FALLBACK_PASSES` embeds the committed numbers so
+simulation is deterministic even without the artifact checkout (a test
+pins the two sources equal).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+from functools import lru_cache
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+from repro.core.addest import V100_LAUNCH_OVERHEAD, V100_MEM_BW
+
+# wire formats, from the kernels' block layout (BLOCK = 256 f32 elements):
+# int8 emits 256 int8 values + one f32 scale per block; ternary packs
+# 2 bits/element + one f32 scale per block.
+_BLOCK_BYTES = 256 * 4
+INT8_WIRE_RATIO = _BLOCK_BYTES / (256 + 4)          # ~3.94x
+TERNARY_WIRE_RATIO = _BLOCK_BYTES / (256 // 4 + 4)  # ~15.06x
+
+# the calibration probe is a same-tiling Pallas copy kernel: one read +
+# one write per byte, so one "pass" moves 2 bytes of memory traffic
+PROBE_BYTES_PER_BYTE = 2.0
+
+# error feedback (EF-SGD) keeps a per-bucket residual: the encoder reads
+# gradient + residual, writes the compensated gradient, and writes the new
+# residual back — ~3 extra probe-passes of streaming traffic per encode
+ERROR_FEEDBACK_PASSES = 3.0
+
+# Hivemind's size-adaptive idiom (SNIPPETS.md snippet 1): buckets at or
+# above the threshold get the real codec, smaller ones go uncompressed
+# (their wire time is negotiation-dominated; compute would be pure loss)
+SIZE_ADAPTIVE = "size-adaptive"
+SIZE_ADAPTIVE_THRESHOLD = float(2 ** 16 + 1)         # bytes
+
+# committed calibration (see module docstring): probe-normalized memory
+# passes per codec stage.  MUST stay equal to the ``codecs`` section of
+# artifacts/bench/BENCH_codec.json — tests/test_codec.py pins it, and the
+# CI calibration step gates the JSON against fresh kernel measurements.
+FALLBACK_PASSES: Dict[str, Dict[str, float]] = {
+    "int8": {"encode": 1.088, "decode": 0.304},
+    "ternary": {"encode": 0.906, "decode": 0.232},
+    "topk": {"encode": 0.939, "decode": 1.0},
+}
+
+TABLE_PATH = Path(__file__).resolve().parents[3] / "artifacts" / "bench" / \
+    "BENCH_codec.json"
+
+
+@lru_cache(maxsize=1)
+def load_codec_table(path: Optional[str] = None) -> Dict[str, Dict[str, float]]:
+    """The committed calibration table (pass counts per codec stage).
+
+    Reads ``artifacts/bench/BENCH_codec.json`` when the repo checkout is
+    present, else falls back to :data:`FALLBACK_PASSES` (pinned equal by
+    test, so both paths price codecs identically)."""
+    p = Path(path) if path else TABLE_PATH
+    try:
+        table = json.loads(p.read_text())["codecs"]
+        return {k: {"encode": float(v["encode_passes"]),
+                    "decode": float(v["decode_passes"])}
+                for k, v in table.items()}
+    except (OSError, KeyError, ValueError):
+        return FALLBACK_PASSES
+
+
+@dataclass(frozen=True)
+class Codec:
+    """A priced compression codec: wire ratio + calibrated compute passes.
+
+    ``encode_passes``/``decode_passes`` are probe-normalized memory passes
+    over the *uncompressed* bytes (see module docstring); the device-scale
+    seconds come from :meth:`encode_seconds`/:meth:`decode_seconds` at the
+    modeled V100 memory bandwidth, plus :attr:`launch_overhead` once per
+    bucket per stage (charged by the lowering on each bucket's first
+    chunk).  A ``free`` codec (both pass counts zero) is the legacy byte
+    divisor and must leave the lowering's arithmetic untouched.
+    """
+
+    name: str                     # canonical instance name, e.g. "topk:8"
+    kind: str                     # base codec: none|ratio|int8|ternary|topk
+    wire_ratio: float             # uncompressed bytes / wire bytes
+    encode_passes: float = 0.0    # probe-normalized memory passes
+    decode_passes: float = 0.0
+    mem_bw: float = V100_MEM_BW
+    launch_overhead: float = V100_LAUNCH_OVERHEAD
+
+    @property
+    def is_free(self) -> bool:
+        return self.encode_passes == 0.0 and self.decode_passes == 0.0
+
+    def encode_seconds(self, nbytes: float) -> float:
+        """Linear encode cost of ``nbytes`` uncompressed gradient bytes
+        (launch overhead is charged separately, once per bucket)."""
+        return (self.encode_passes * PROBE_BYTES_PER_BYTE * nbytes
+                / self.mem_bw)
+
+    def decode_seconds(self, nbytes: float) -> float:
+        return (self.decode_passes * PROBE_BYTES_PER_BYTE * nbytes
+                / self.mem_bw)
+
+    def with_error_feedback(self) -> "Codec":
+        """EF-SGD residual accumulation: extra encode-side memory traffic."""
+        if self.is_free:
+            raise ValueError(
+                f"error feedback needs a lossy codec, got {self.name!r} "
+                f"(the free byte divisor has no residual to feed back)")
+        return replace(self, name=self.name + "+ef",
+                       encode_passes=self.encode_passes
+                       + ERROR_FEEDBACK_PASSES)
+
+
+NONE_CODEC = Codec(name="none", kind="none", wire_ratio=1.0)
+
+
+def parse_codec(spec: str) -> Tuple[str, Optional[float]]:
+    """``"name[:param]"`` -> ``(name, param-or-None)``."""
+    if ":" in spec:
+        base, _, raw = spec.partition(":")
+        try:
+            return base, float(raw)
+        except ValueError:
+            raise ValueError(f"bad codec parameter in {spec!r}") from None
+    return spec, None
+
+
+def get_codec(spec: str, *, compression_ratio: float = 1.0,
+              table: Optional[Dict[str, Dict[str, float]]] = None) -> Codec:
+    """Resolve a codec string (plus the legacy ``compression_ratio`` float)
+    into a priced :class:`Codec`.
+
+    - ``none`` with ``compression_ratio != 1`` routes through the
+      parametric ``ratio`` codec (zero compute) — the deprecated
+      ``NetworkModel.compression_ratio`` path, bit-identical by
+      construction since the ratio float lands unchanged in the cost
+      model;
+    - ``ratio``/``topk`` take their ratio from the ``:param`` suffix, or
+      fall back to ``compression_ratio``;
+    - fixed-format codecs (``int8``, ``ternary``) refuse a non-unit
+      ``compression_ratio`` — their wire ratio is intrinsic.
+    """
+    base, param = parse_codec(spec)
+    passes = table if table is not None else load_codec_table()
+
+    def _kernel(kind: str, ratio: float, name: str) -> Codec:
+        p = passes[kind]
+        return Codec(name=name, kind=kind, wire_ratio=float(ratio),
+                     encode_passes=p["encode"], decode_passes=p["decode"])
+
+    if base == "none":
+        if param is not None:
+            raise ValueError(f"codec 'none' takes no parameter: {spec!r}")
+        if compression_ratio != 1.0:
+            return Codec(name=f"ratio:{compression_ratio:g}", kind="ratio",
+                         wire_ratio=float(compression_ratio))
+        return NONE_CODEC
+    if base == "ratio":
+        r = param if param is not None else compression_ratio
+        return Codec(name=f"ratio:{r:g}", kind="ratio", wire_ratio=float(r))
+    if base in ("int8", "ternary"):
+        if param is not None:
+            raise ValueError(f"codec {base!r} takes no parameter: {spec!r}")
+        if compression_ratio != 1.0:
+            raise ValueError(
+                f"codec {base!r} has an intrinsic wire ratio; it does not "
+                f"compose with compression_ratio={compression_ratio:g}")
+        ratio = INT8_WIRE_RATIO if base == "int8" else TERNARY_WIRE_RATIO
+        return _kernel(base, ratio, base)
+    if base == "topk":
+        r = param if param is not None else compression_ratio
+        return _kernel("topk", r, f"topk:{r:g}")
+    known = "none, ratio[:r], int8, ternary, topk[:r], " + SIZE_ADAPTIVE
+    raise ValueError(f"unknown codec {spec!r}; known: {known}")
+
+
+# ---------------------------------------------------------------------------
+# regime classification (fig13)
+# ---------------------------------------------------------------------------
+
+REGIME_WINS = "wins"
+REGIME_LOSES = "loses"
+REGIME_PURE_OVERHEAD = "pure-overhead"
+REGIME_NEUTRAL = "neutral"
+
+# baseline overhead below this fraction of t_batch means there was nothing
+# for compression to win (the paper's "no compression needed at 100 Gbps")
+_NOTHING_TO_WIN = 0.01
+
+
+def classify_regime(overhead_codec: float, overhead_none: float,
+                    t_batch: float, codec_compute: float,
+                    eps: float = 1e-6) -> str:
+    """fig13's cell classification: does compression *win*, *lose*, or is
+    it *pure overhead* against the same cell run uncompressed?
+
+    - ``pure-overhead``: the baseline was already compute-bound (overhead
+      under 1% of t_batch), so there was nothing for the wire savings to
+      buy and the encode/decode compute is dead weight — this is checked
+      *first*, so a micro-delta on a negligible baseline never counts as
+      a win or a loss;
+    - ``wins``: the codec materially reduced a real t_overhead (by more
+      than 1% of it);
+    - ``loses``: the codec's compute outweighed its wire savings;
+    - ``neutral``: nothing material changed (e.g. free codecs).
+    """
+    if overhead_none <= _NOTHING_TO_WIN * t_batch:
+        return REGIME_PURE_OVERHEAD if codec_compute > 0.0 else REGIME_NEUTRAL
+    margin = max(eps, 0.01 * overhead_none)
+    if overhead_codec < overhead_none - margin:
+        return REGIME_WINS
+    if overhead_codec > overhead_none + margin:
+        return REGIME_LOSES
+    return REGIME_PURE_OVERHEAD if codec_compute > 0.0 else REGIME_NEUTRAL

@@ -6,6 +6,14 @@ Paper model (flat ring, reduce-scatter + all-gather):
     reduction(S, N)        = (N - 1) * AddEst(S / N)
 
 Sizes in bytes, bandwidth in bytes/s, times in seconds.
+
+``compression_ratio`` on these models is the paper's §3.2 free byte
+divisor — it scales transmission with zero encode/decode cost.  It is
+kept for the legacy figures (fig8) and stays bit-identical, but new work
+should prefer the priced codec axis (``repro.core.codec``): the
+simulator routes ``compression_ratio`` through the parametric ratio
+codec (``get_codec("none", compression_ratio=r)``), which reproduces
+this divisor exactly while making the zero-compute assumption explicit.
 """
 from __future__ import annotations
 
@@ -37,7 +45,9 @@ class RingAllReduce:
     n: int
     bw: float
     addest: AddEst
-    compression_ratio: float = 1.0   # paper §3.2: divides transmission only
+    # paper §3.2: divides transmission only.  Deprecated in favor of the
+    # priced codec axis (repro.core.codec) — see the module docstring.
+    compression_ratio: float = 1.0
     compress_reduction: bool = False # extended mode: also scales vector-adds
 
     def time(self, size: int) -> float:

@@ -34,17 +34,32 @@ the schedulers means every scheduler composes with every rail policy, and
 an ``n_rails=1`` plan is the *same object* — bit-exact with a run that
 never heard of rails.
 
+Codec assignment (gradient compression) follows the same pass idiom:
+:func:`assign_codec` stamps each op's ``codec`` (uniformly, or per bucket
+under the Hivemind-style ``size-adaptive`` policy), and
+:func:`plan_to_flows` — given a ``codecs`` cost table — lowers each op
+into an **encode -> wire -> decode** pipeline: encode serializes on the
+job's GPU (a closed-form chain that shifts the wire flow's ready time;
+the encoder doesn't contend for the NIC), the wire flow carries the
+codec's compressed wire time, and decode rides as post-wire latency.
+Each op stays one engine flow, so codecs compose with every scheduler,
+rail policy, contention, and jitter unchanged.
+
 Exactness contract: ``fifo`` lowered with ``n_rails=1`` onto an
 uncontended link reproduces the legacy serialized loop bit-for-bit (the
 ``duration`` passed to the engine is the legacy loop's exact float
-expression); all schedulers conserve bytes exactly per bucket, and
-:func:`assign_rails` permutes nothing — it only stamps channels.
+expression); all schedulers conserve bytes exactly per bucket,
+:func:`assign_rails` permutes nothing — it only stamps channels — and a
+``codecs=None`` (or all-``none``) lowering takes the pre-codec code path
+verbatim.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple)
 
+from repro.core.codec import SIZE_ADAPTIVE_THRESHOLD, Codec
 from repro.core.events import DEFAULT_JOB, FlowSpec
 
 DEFAULT_CHUNKS = 4
@@ -59,7 +74,11 @@ class CommOp:
     plan's job (smaller first, ties by ``op_id``); ``ready`` is the
     bucket's flush time.  ``channel`` is the rail the op transmits on —
     0 (the only rail) until :func:`assign_rails` stamps a multi-rail
-    assignment.
+    assignment.  ``codec`` names the compression codec the op's bytes go
+    through on the wire — ``"none"`` until :func:`assign_codec` stamps
+    one; ``size`` stays the *uncompressed* byte count (the IR's conserved
+    quantity), compression enters through the per-codec cost model at
+    lowering time.
     """
 
     op_id: int
@@ -71,6 +90,7 @@ class CommOp:
     ready: float                    # earliest start (the bucket's flush time)
     priority: float                 # smaller = served first
     channel: int = 0                # rail id (stamped by assign_rails)
+    codec: str = "none"             # codec name (stamped by assign_codec)
 
 
 @dataclass(frozen=True)
@@ -253,12 +273,93 @@ def assign_rails(plan: CommPlan, n_rails: int,
 
 
 # ---------------------------------------------------------------------------
+# codec assignment: CommPlan -> CommPlan with codecs stamped
+# ---------------------------------------------------------------------------
+
+CODEC_POLICIES = ("uniform", "size-adaptive")
+
+
+def assign_codec(plan: CommPlan, codec: str = "none",
+                 policy: str = "uniform", *,
+                 threshold: Optional[float] = None) -> CommPlan:
+    """Stamp each op's ``codec`` under a named policy.
+
+    - ``uniform``        every op gets ``codec``;
+    - ``size-adaptive``  Hivemind's idiom: a *bucket* whose total bytes
+      reach ``threshold`` (default :data:`~repro.core.codec.
+      SIZE_ADAPTIVE_THRESHOLD`) gets ``codec``, smaller buckets stay
+      uncompressed — their wire time is negotiation-dominated and the
+      encode/decode compute would be pure loss.  The decision is per
+      bucket (all chunks of a bucket agree), since the runtime compresses
+      the fused bucket before chunking it onto the wire.
+
+    ``codec="none"`` under ``uniform`` returns ``plan`` itself (the same
+    object): a codec-free plan is bit-exact with a run that never heard
+    of codecs.  Assignment never reorders, splits, or resizes ops.
+    """
+    if policy not in CODEC_POLICIES:
+        raise KeyError(f"unknown codec policy {policy!r}; "
+                       f"known: {', '.join(CODEC_POLICIES)}")
+    if policy == "uniform":
+        if codec == "none":
+            return plan
+        ops = tuple(replace(op, codec=codec) for op in plan.ops)
+        return replace(plan, ops=ops)
+    thr = SIZE_ADAPTIVE_THRESHOLD if threshold is None else threshold
+    bucket_bytes: Dict[int, float] = {}
+    for op in plan.ops:
+        bucket_bytes[op.bucket_id] = bucket_bytes.get(op.bucket_id, 0.0) \
+            + op.size
+    ops = tuple(replace(op, codec=codec
+                        if bucket_bytes[op.bucket_id] >= thr else "none")
+                for op in plan.ops)
+    return replace(plan, ops=ops)
+
+
+class CodecLowering(NamedTuple):
+    """One codec's lowering bundle: the priced :class:`Codec` plus a cost
+    model whose wire term already divides by the codec's wire ratio (built
+    by the simulator via ``make_cost_model(compression_ratio=
+    codec.wire_ratio)``)."""
+
+    codec: Codec
+    cost: object
+
+
+def _codec_stage_seconds(op: CommOp, codec: Codec) -> Tuple[float, float]:
+    """(encode, decode) seconds for one op.  Launch overheads are charged
+    once per bucket per stage, on the bucket's first chunk (mirroring how
+    the negotiation cost rides on chunk 0)."""
+    if codec.is_free:
+        return 0.0, 0.0
+    launch = codec.launch_overhead if op.chunk == 0 else 0.0
+    return (launch + codec.encode_seconds(op.size),
+            launch + codec.decode_seconds(op.size))
+
+
+def codec_compute_seconds(plan: CommPlan,
+                          codecs: Optional[Mapping[str, CodecLowering]]
+                          ) -> float:
+    """Total encode+decode compute the plan spends on compression — the
+    per-worker GPU-seconds the byte-divisor shortcut pretends are free."""
+    if codecs is None:
+        return 0.0
+    t = 0.0
+    for op in plan.ops:
+        enc, dec = _codec_stage_seconds(op, codecs[op.codec].codec)
+        t += enc + dec
+    return t
+
+
+# ---------------------------------------------------------------------------
 # lowering a plan onto the event engine
 # ---------------------------------------------------------------------------
 
 def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
                   job: str = "job0", link: str = "nic",
-                  op_id_base: int = 0, n_rails: int = 1) -> List[FlowSpec]:
+                  op_id_base: int = 0, n_rails: int = 1,
+                  codecs: Optional[Mapping[str, CodecLowering]] = None
+                  ) -> List[FlowSpec]:
     """CommOps -> engine flows under a cost model.
 
     ``cost`` is any all-reduce cost model from :mod:`repro.core.network_model`
@@ -277,10 +378,59 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
     (``job@r<k>``) — a NIC's rails have independent DMA engines, so one
     job's flows on different rails overlap.  Run the result with
     ``run_flows(flows, rails={link: n_rails})``.
+
+    ``codecs`` (a ``{codec name: CodecLowering}`` table covering every
+    ``op.codec`` in the plan) turns each op into an encode -> wire ->
+    decode pipeline while keeping it ONE engine flow:
+
+    - **encode** runs on the job's GPU, which never contends for the NIC,
+      so encode completions are a closed-form serialized chain
+      (``end_i = max(ready_i, end_{i-1}) + t_enc_i`` in op order) computed
+      right here; the wire flow's ``ready`` becomes its op's encode end;
+    - **wire** uses the op's codec's cost model — its wire term divides
+      by the codec's wire ratio;
+    - **decode** is post-wire compute with no link share: it folds into
+      the flow's fixed ``latency`` (and ``duration``, so fifo holds the
+      job through it).
+
+    ``codecs=None`` — or a table whose codecs are all free — takes the
+    pre-codec arithmetic path for each op: a ``none`` plan is
+    bit-identical with a build that never heard of codecs.
     """
     hold = plan.scheduler == "fifo"
-    wire_time = getattr(cost, "wire_time", cost.time)
     flows: List[FlowSpec] = []
+    if codecs is not None:
+        enc_clock: Optional[float] = None
+        for op in plan.ops:
+            cl = codecs[op.codec]
+            enc, dec = _codec_stage_seconds(op, cl.codec)
+            c = cl.cost
+            total = c.time(op.size) + per_tensor_overhead * op.n_tensors
+            wire = min(getattr(c, "wire_time", c.time)(op.size), total)
+            if enc > 0.0:
+                start = op.ready if enc_clock is None \
+                    else max(op.ready, enc_clock)
+                enc_clock = start + enc
+                ready = enc_clock
+            else:
+                ready = op.ready
+            lat = max(0.0, total - wire) + dec
+            if n_rails <= 1:
+                flows.append(FlowSpec(
+                    op_id=op_id_base + op.op_id, ready=ready, work=wire,
+                    latency=lat, priority=op.priority, job=job,
+                    link=f"{link}{op.channel}" if op.channel else link,
+                    hold=hold, duration=total + dec))
+            else:
+                rail_work = wire * n_rails
+                flows.append(FlowSpec(
+                    op_id=op_id_base + op.op_id, ready=ready,
+                    work=rail_work, latency=lat, priority=op.priority,
+                    job=job if op.channel == 0 else f"{job}@r{op.channel}",
+                    link=link, hold=hold, duration=lat + rail_work,
+                    rail=op.channel))
+        return flows
+    wire_time = getattr(cost, "wire_time", cost.time)
     if n_rails <= 1:
         for op in plan.ops:
             total = cost.time(op.size) + per_tensor_overhead * op.n_tensors

@@ -47,11 +47,14 @@ import numpy as np
 
 from repro.configs.base import CommConfig
 from repro.core.addest import AddEst
+from repro.core.codec import NONE_CODEC, SIZE_ADAPTIVE, Codec, get_codec
 from repro.core.events import (DEFAULT_LINK, FlowResult, FlowSpec,
                                perturb_flows, run_flows)
 from repro.core.network_model import RingAllReduce, make_cost_model
-from repro.core.schedule import (CommPlan, assign_rails, canonical_scheduler,
-                                 clone_flows, lower_buckets, plan_to_flows)
+from repro.core.schedule import (CodecLowering, CommPlan, assign_codec,
+                                 assign_rails, canonical_scheduler,
+                                 clone_flows, codec_compute_seconds,
+                                 lower_buckets, plan_to_flows)
 from repro.core.timeline import GradTimeline
 from repro.core.transport import Transport, get_transport
 
@@ -95,6 +98,8 @@ class SimResult:
     wire_bytes_per_worker: float      # actual bytes each worker moved
     network_utilization: float        # avg wire throughput / physical bw
     scheduler: str = "fifo"           # comm schedule the result was run under
+    codec: str = "none"               # compression codec the run was under
+    codec_compute_s: float = 0.0      # encode+decode GPU seconds spent
 
     def summary(self) -> str:
         return (f"{self.name}: n={self.n_workers} bw={self.bandwidth*8/1e9:.0f}Gbps "
@@ -106,11 +111,16 @@ class SimResult:
         """Stable JSON-ready form (the experiment-artifact cell schema).
 
         Buckets are summarized by count unless ``include_buckets``; full
-        float repr round-trips through JSON bit-exactly either way.
+        float repr round-trips through JSON bit-exactly either way.  The
+        codec fields are elided at their defaults so codec-free artifacts
+        keep their exact pre-codec bytes.
         """
         d = {f: getattr(self, f) for f in RESULT_FIELDS}
         d["scheduler"] = self.scheduler
         d["n_buckets"] = len(self.buckets)
+        if self.codec != "none":
+            d["codec"] = self.codec
+            d["codec_compute_s"] = self.codec_compute_s
         if include_buckets:
             d["buckets"] = [b.to_dict() for b in self.buckets]
         return d
@@ -119,7 +129,9 @@ class SimResult:
     def from_dict(d: dict) -> "SimResult":
         buckets = tuple(Bucket.from_dict(b) for b in d.get("buckets", ()))
         return SimResult(**{f: d[f] for f in RESULT_FIELDS}, buckets=buckets,
-                         scheduler=d.get("scheduler", "fifo"))
+                         scheduler=d.get("scheduler", "fifo"),
+                         codec=d.get("codec", "none"),
+                         codec_compute_s=d.get("codec_compute_s", 0.0))
 
 
 def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
@@ -255,11 +267,47 @@ def _fastpath_enabled() -> bool:
     return os.environ.get("REPRO_SIM_FASTPATH", "1") != "0"
 
 
+def _resolve_codec(codec: str, compression_ratio: float,
+                   error_feedback: bool) -> Tuple[str, Codec]:
+    """Resolve the simulate-level codec knobs into an assignment policy
+    plus a priced :class:`~repro.core.codec.Codec`.
+
+    ``size-adaptive[:base]`` selects the Hivemind per-bucket policy with
+    ``base`` (default ``int8``) on large buckets; anything else is a
+    uniform stamp.  The legacy ``compression_ratio`` float rides along:
+    ``codec="none"`` with a non-unit ratio resolves to the free parametric
+    ``ratio`` codec, which reproduces the deprecated byte-divisor path
+    bit-identically.
+    """
+    if codec == SIZE_ADAPTIVE or codec.startswith(SIZE_ADAPTIVE + ":"):
+        base = codec.partition(":")[2] or "int8"
+        resolved = get_codec(base, compression_ratio=compression_ratio)
+        policy = "size-adaptive"
+    else:
+        resolved = get_codec(codec, compression_ratio=compression_ratio)
+        policy = "uniform"
+    if error_feedback:
+        resolved = resolved.with_error_feedback()
+    return policy, resolved
+
+
+def _codec_lowerings(plan: CommPlan, resolved: Codec, base_cost, codec_cost
+                     ) -> dict:
+    """The ``codecs`` table for a stamped plan: the resolved codec plus the
+    ``none`` passthrough (present under size-adaptive plans)."""
+    table = {resolved.name: CodecLowering(resolved, codec_cost)}
+    if any(op.codec == "none" for op in plan.ops):
+        table["none"] = CodecLowering(NONE_CODEC, base_cost)
+    return table
+
+
 def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 tr: Transport, *, job: str = "job0",
                 results: Optional[Sequence[FlowResult]] = None,
                 n_rails: int = 1, jitter: float = 0.0, jitter_seed: int = 0,
-                stream: int = 0) -> Tuple[List[Bucket], float, float]:
+                stream: int = 0,
+                codecs: Optional[dict] = None
+                ) -> Tuple[List[Bucket], float, float]:
     """Map per-op flow results back to per-bucket (start, end) + busy time.
 
     ``plan`` must already carry its rail assignment (channels); ``n_rails``
@@ -271,7 +319,7 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
     """
     if results is None:
         flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job,
-                              n_rails=n_rails)
+                              n_rails=n_rails, codecs=codecs)
         if jitter > 0.0:
             flows = perturb_flows(flows, jitter, jitter_seed, stream)
         if _fastpath_enabled():
@@ -305,7 +353,8 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
              scheduler: Optional[str] = None,
              n_chunks: Optional[int] = None,
              n_rails: int = 1, rail_policy: str = "round-robin",
-             jitter: float = 0.0, jitter_seed: int = 0) -> SimResult:
+             jitter: float = 0.0, jitter_seed: int = 0,
+             codec: str = "none", error_feedback: bool = False) -> SimResult:
     """Run the two-process simulation for one iteration.
 
     ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
@@ -319,6 +368,16 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     ``jitter`` (seconds, mean of the per-flow exponential delay) with
     ``jitter_seed`` turns on the straggler axis.  Both at their defaults
     reproduce today's results bit-for-bit.
+
+    ``codec`` names a gradient-compression codec (see
+    :mod:`repro.core.codec`): real codecs (``int8``, ``ternary``,
+    ``topk:r``, ``size-adaptive[:base]``) lower every op into encode ->
+    wire -> decode with kernel-calibrated compute costs;
+    ``error_feedback`` adds the EF-SGD residual traffic to encode (and
+    rejects free codecs).  ``codec="none"`` — with or without the
+    deprecated ``compression_ratio`` byte divisor, which now routes
+    through the free parametric ``ratio`` codec — is bit-exact with the
+    pre-codec build.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -327,19 +386,33 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     sched = canonical_scheduler(scheduler or comm.scheduler)
     k = n_chunks if n_chunks is not None else comm.sched_chunks
     n_rails = max(int(n_rails), 1)      # 0 and 1 both mean "no rails"
+    policy, resolved = _resolve_codec(codec, compression_ratio,
+                                      error_feedback)
+    free = resolved.is_free and policy == "uniform"
 
-    cost = make_cost_model(n_workers, eff_bw, addest, topology=topology,
-                           n_pods=n_pods,
-                           dcn_bw=tr.effective(dcn_bandwidth or bandwidth / 2),
-                           compression_ratio=compression_ratio)
+    def _cost(ratio: float):
+        return make_cost_model(
+            n_workers, eff_bw, addest, topology=topology, n_pods=n_pods,
+            dcn_bw=tr.effective(dcn_bandwidth or bandwidth / 2),
+            compression_ratio=ratio)
+
+    # free codecs keep the legacy path verbatim: the wire ratio lands in
+    # the cost model exactly where compression_ratio used to
+    cost = _cost(resolved.wire_ratio if free else 1.0)
 
     buckets = fuse_buckets(timeline, comm)
     plan = lower_buckets([(b.flush_time, b.size, b.n_tensors)
                           for b in buckets], scheduler=sched, n_chunks=k)
     plan = assign_rails(plan, n_rails, rail_policy)
+    codecs = None
+    if not free:
+        plan = assign_codec(plan, resolved.name, policy=policy)
+        codecs = _codec_lowerings(plan, resolved, cost,
+                                  _cost(resolved.wire_ratio))
     served, t_sync, busy = _serve_plan(plan, buckets, cost, tr,
                                        n_rails=n_rails, jitter=jitter,
-                                       jitter_seed=jitter_seed)
+                                       jitter_seed=jitter_seed,
+                                       codecs=codecs)
 
     if not served:
         t_sync = timeline.t_back
@@ -347,8 +420,13 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     f_sim = timeline.t_batch / (timeline.t_batch + t_overhead)
 
     # wire bytes from the active cost model (SwitchML moves ~S per worker,
-    # hierarchical counts the ICI stage, ring the 2S(N-1)/N ring traffic)
-    wire = sum(cost.wire_bytes(b.size) for b in served)
+    # hierarchical counts the ICI stage, ring the 2S(N-1)/N ring traffic);
+    # under a codec each op's bytes go through its own codec's model
+    if codecs is None:
+        wire = sum(cost.wire_bytes(b.size) for b in served)
+    else:
+        wire = sum(codecs[op.codec].cost.wire_bytes(op.size)
+                   for op in plan.ops)
     # utilization while the communication process occupies the link (paper
     # Fig. 4 measures real-time NIC throughput during the comm phase);
     # with rails, ``busy`` sums per-lane occupancy, so the denominator is
@@ -360,7 +438,8 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
         effective_bw=eff_bw, t_batch=timeline.t_batch, t_back=timeline.t_back,
         t_sync=t_sync, t_overhead=t_overhead, scaling_factor=f_sim,
         buckets=tuple(served), wire_bytes_per_worker=wire,
-        network_utilization=min(util, 1.0), scheduler=sched)
+        network_utilization=min(util, 1.0), scheduler=sched,
+        codec=codec, codec_compute_s=codec_compute_seconds(plan, codecs))
 
 
 def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
@@ -371,8 +450,9 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                         scheduler: Optional[str] = None,
                         n_chunks: Optional[int] = None,
                         n_rails: int = 1, rail_policy: str = "round-robin",
-                        jitter: float = 0.0,
-                        jitter_seed: int = 0) -> List[SimResult]:
+                        jitter: float = 0.0, jitter_seed: int = 0,
+                        codec: str = "none",
+                        error_feedback: bool = False) -> List[SimResult]:
     """Multiple jobs sharing one physical link (fair-share contention).
 
     Each timeline is an independent training job running the same ring
@@ -385,7 +465,9 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     as in :func:`simulate` — contention then happens per rail.  With
     ``jitter`` on, each job straggles independently (job ``j`` draws from
     stream ``j`` of ``jitter_seed``), so co-located jobs do not flush in
-    lockstep.
+    lockstep.  ``codec``/``error_feedback`` price gradient compression
+    exactly as in :func:`simulate`; each job encodes on its own GPU, so
+    the encode chain embedded in the cloned flows is per job.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -394,7 +476,13 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     sched = canonical_scheduler(scheduler or comm.scheduler)
     k = n_chunks if n_chunks is not None else comm.sched_chunks
     n_rails = max(int(n_rails), 1)      # 0 and 1 both mean "no rails"
-    cost = RingAllReduce(n_workers, eff_bw, addest, compression_ratio)
+    policy, resolved = _resolve_codec(codec, compression_ratio,
+                                      error_feedback)
+    free = resolved.is_free and policy == "uniform"
+    cost = RingAllReduce(n_workers, eff_bw, addest,
+                         resolved.wire_ratio if free else 1.0)
+    codec_cost = None if free else RingAllReduce(n_workers, eff_bw, addest,
+                                                 resolved.wire_ratio)
 
     jobs = []
     all_flows = []
@@ -411,29 +499,38 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                                   for b in buckets], scheduler=sched,
                                  n_chunks=k)
             plan = assign_rails(plan, n_rails, rail_policy)
+            codecs = None
+            if not free:
+                plan = assign_codec(plan, resolved.name, policy=policy)
+                codecs = _codec_lowerings(plan, resolved, cost, codec_cost)
             flows0 = plan_to_flows(plan, cost, tr.per_tensor_overhead,
-                                   op_id_base=0, n_rails=n_rails)
-            got = lowered[id(tl)] = (buckets, plan, flows0)
-        buckets, plan, flows0 = got
+                                   op_id_base=0, n_rails=n_rails,
+                                   codecs=codecs)
+            got = lowered[id(tl)] = (buckets, plan, flows0, codecs)
+        buckets, plan, flows0, codecs = got
         flows = clone_flows(flows0, base, f"job{j}")
         if jitter > 0.0:
             flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
         base += len(flows)
-        jobs.append((tl, buckets, plan, len(flows)))
+        jobs.append((tl, buckets, plan, codecs, len(flows)))
         all_flows.extend(flows)
 
     results = run_flows(all_flows, rails={DEFAULT_LINK: n_rails}
                         if n_rails > 1 else None)
     out: List[SimResult] = []
     pos = 0
-    for j, (tl, buckets, plan, n_flows) in enumerate(jobs):
+    for j, (tl, buckets, plan, codecs, n_flows) in enumerate(jobs):
         served, t_sync, busy = _serve_plan(plan, buckets, cost, tr,
                                            results=results[pos:pos + n_flows])
         pos += n_flows
         if not served:
             t_sync = tl.t_back
         t_overhead = max(0.0, t_sync - tl.t_back)
-        wire = sum(cost.wire_bytes(b.size) for b in served)
+        if codecs is None:
+            wire = sum(cost.wire_bytes(b.size) for b in served)
+        else:
+            wire = sum(codecs[op.codec].cost.wire_bytes(op.size)
+                       for op in plan.ops)
         util = ((wire / busy) / (bandwidth / n_rails)
                 if busy > 0 else 0.0)
         out.append(SimResult(
@@ -442,5 +539,7 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             t_sync=t_sync, t_overhead=t_overhead,
             scaling_factor=tl.t_batch / (tl.t_batch + t_overhead),
             buckets=tuple(served), wire_bytes_per_worker=wire,
-            network_utilization=min(util, 1.0), scheduler=sched))
+            network_utilization=min(util, 1.0), scheduler=sched,
+            codec=codec,
+            codec_compute_s=codec_compute_seconds(plan, codecs)))
     return out

@@ -64,11 +64,11 @@ def _cells(spec) -> Dict[tuple, Dict]:
 
 
 def _k(model, servers, bw, transport, ratio=1.0, topo="ring", sched="fifo",
-       n_jobs=1, n_rails=1, jitter_ms=0.0):
+       n_jobs=1, n_rails=1, jitter_ms=0.0, codec="none"):
     """An ``index_cells`` key in CELL_AXES order, with trailing-axis
     defaults — figure builders only name the axes their sweep varies."""
     return (model, servers, bw, transport, ratio, topo, sched, n_jobs,
-            n_rails, jitter_ms)
+            n_rails, jitter_ms, codec)
 
 def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
                             servers: Optional[Sequence[int]] = None,
@@ -307,6 +307,57 @@ def fig12_stragglers(models: Optional[Sequence[str]] = None,
                     row[f"jitter{j:g}ms"] = c["scaling_factor"]
                     row[f"jitter{j:g}ms_overhead_ms"] = c["t_overhead"] * 1e3
                 out.append(row)
+    return out
+
+
+def fig13_compression_regimes(models: Optional[Sequence[str]] = None,
+                              bws: Optional[Sequence[float]] = None,
+                              codecs: Optional[Sequence[str]] = None,
+                              schedulers: Optional[Sequence[str]] = None,
+                              n_jobs: Optional[Sequence[int]] = None) -> List[Dict]:
+    """Compression-regime what-if: each priced codec against its
+    ``codec="none"`` twin, classified as wins / loses / pure-overhead /
+    neutral by :func:`repro.core.codec.classify_regime`.  Rows come from
+    the registered ``compression`` grid, the sweep the
+    ``compression_suite`` golden artifact gates in CI: at 10 Gbps the
+    network is the bottleneck and int8 wins outright; at 100 Gbps the
+    baseline overhead is already negligible and every codec is pure
+    GPU-time overhead."""
+    from repro.core.codec import classify_regime
+    spec = _grid("compression",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if codecs is None
+                    else dict(codec=tuple(codecs) if "none" in codecs
+                              else ("none",) + tuple(codecs))),
+                 **({} if schedulers is None
+                    else dict(scheduler=tuple(schedulers))),
+                 **({} if n_jobs is None
+                    else dict(n_jobs=tuple(int(j) for j in n_jobs))))
+    ix = _cells(spec)
+    n, tr = spec.n_servers[0], spec.transport[0]
+    out = []
+    for m in spec.models:
+        for bw in spec.bandwidth_gbps:
+            for s in spec.scheduler:
+                for j in spec.n_jobs:
+                    base = ix[_k(m, n, bw, tr, sched=s, n_jobs=j)]
+                    for cd in spec.codec:
+                        if cd == "none":
+                            continue
+                        c = ix[_k(m, n, bw, tr, sched=s, n_jobs=j, codec=cd)]
+                        out.append(dict(
+                            model=m, bandwidth_gbps=bw, scheduler=s,
+                            n_jobs=j, codec=cd,
+                            scaling=c["scaling_factor"],
+                            baseline=base["scaling_factor"],
+                            overhead_ms=c["t_overhead"] * 1e3,
+                            baseline_overhead_ms=base["t_overhead"] * 1e3,
+                            codec_compute_ms=c["codec_compute_s"] * 1e3,
+                            regime=classify_regime(
+                                c["t_overhead"], base["t_overhead"],
+                                base["t_batch"], c["codec_compute_s"])))
     return out
 
 

@@ -18,7 +18,8 @@ from repro.experiments.runner import index_cells
 # n_buckets is structural and must match exactly.
 NUMERIC_FIELDS = ("scaling_factor", "t_sync", "t_overhead", "t_batch",
                   "t_back", "effective_bw", "effective_gbps",
-                  "network_utilization", "wire_bytes_per_worker")
+                  "network_utilization", "wire_bytes_per_worker",
+                  "codec_compute_s")
 DEFAULT_ATOL = 1e-9
 DEFAULT_RTOL = 1e-9
 

@@ -141,6 +141,21 @@ _register(ExperimentSpec(
     scheduler=("fifo", "chunked"), sched_chunks=8,
     jitter_ms=(0.0, 2.0, 10.0), jitter_seed=2020))
 
+# Compression as a priced axis (the Agarwal et al. critique of fig 8's
+# free byte divisor): every codec carries kernel-calibrated encode/decode
+# compute, so each cell answers "does this codec win, lose, or just burn
+# GPU time here?" against its codec=none twin.  Ideal transport isolates
+# the wire-vs-compute tradeoff (under horovod_tcp the transport cap, not
+# the network, dominates at 100 Gbps): at 10 Gbps the network is the
+# bottleneck and compression wins; at 100 Gbps the baseline overhead is
+# already negligible and any codec is pure overhead.  Gated by
+# artifacts/golden/compression_suite.json in CI (fig13 renders it).
+_register(ExperimentSpec(
+    name="compression", models=PAPER_MODELS, n_servers=(8,),
+    bandwidth_gbps=(1.0, 10.0, 100.0), transport=("ideal",),
+    scheduler=("fifo", "chunked"), sched_chunks=8, n_jobs=(1, 4),
+    codec=("none", "int8", "ternary", "topk:8", "size-adaptive")))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
@@ -149,6 +164,7 @@ SUITES: Dict[str, Tuple[str, ...]] = {
     "paper-xl": ("xl-bandwidth", "xl-sched", "xl-contention"),
     "scenario": ("multirail", "straggler"),
     "xxl": ("xxl-contention",),
+    "compression": ("compression",),
 }
 
 

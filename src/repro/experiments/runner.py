@@ -73,9 +73,13 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
 
     The scenario axes ride along as plain keyword arguments: ``n_rails``
     splits the cell's (aggregate) bandwidth into rails under
-    ``spec.rail_policy``, and ``jitter_ms`` perturbs flush times under
-    ``spec.jitter_seed`` — both default-off, leaving the historical cells'
-    code path (and bits) untouched.
+    ``spec.rail_policy``, ``jitter_ms`` perturbs flush times under
+    ``spec.jitter_seed``, and ``codec`` prices gradient compression as
+    encode -> wire -> decode stages (``spec.error_feedback`` adds the
+    EF-SGD residual cost to lossy-codec cells; ``codec="none"`` cells
+    ignore it, so a grid can sweep codecs with EF on without its baseline
+    cells rejecting the knob) — all default-off, leaving the historical
+    cells' code path (and bits) untouched.
     """
     kwargs = dict(
         n_workers=cell.n_servers * spec.gpus_per_server,
@@ -88,6 +92,8 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
         rail_policy=spec.rail_policy,
         jitter=cell.jitter_ms / 1e3,
         jitter_seed=spec.jitter_seed,
+        codec=cell.codec,
+        error_feedback=spec.error_feedback and cell.codec != "none",
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())

@@ -22,16 +22,17 @@ SPEC_VERSION = 1
 # written before the axis existed still index consistently)
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
              "compression_ratio", "topology", "scheduler", "n_jobs",
-             "n_rails", "jitter_ms")
+             "n_rails", "jitter_ms", "codec")
 
 AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
-                 "jitter_ms": 0.0}
+                 "jitter_ms": 0.0, "codec": "none"}
 
 # axes added after the first golden artifacts shipped: omitted from
 # serialized cells/specs while at their default, so pre-axis artifacts stay
 # byte-identical and spec hashes (the CI regression gate) never drift for
 # grids that do not sweep them
-_ELIDED_AT_DEFAULT = {"n_jobs": 1, "n_rails": 1, "jitter_ms": 0.0}
+_ELIDED_AT_DEFAULT = {"n_jobs": 1, "n_rails": 1, "jitter_ms": 0.0,
+                      "codec": "none"}
 
 
 def axis_value(cell: Dict, axis: str):
@@ -59,6 +60,7 @@ class Cell:
     n_jobs: int = 1                 # co-located jobs contending for the link
     n_rails: int = 1                # rails splitting the aggregate bandwidth
     jitter_ms: float = 0.0          # mean per-flow flush delay (stragglers)
+    codec: str = "none"             # gradient-compression codec (core.codec)
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
@@ -102,6 +104,7 @@ class ExperimentSpec:
     n_jobs: Tuple[int, ...] = (1,)      # contention axis (fair-share link)
     n_rails: Tuple[int, ...] = (1,)     # multi-rail axis (aggregate bw split)
     jitter_ms: Tuple[float, ...] = (0.0,)   # straggler axis (mean flush delay)
+    codec: Tuple[str, ...] = ("none",)  # compression-codec axis (core.codec)
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
@@ -109,19 +112,21 @@ class ExperimentSpec:
     sched_chunks: int = 4               # chunks/bucket for pipelined scheds
     rail_policy: str = "round-robin"    # CommOp -> rail assignment policy
     jitter_seed: int = 0                # seed of the straggler perturbation
+    error_feedback: bool = False        # EF-SGD residual cost on lossy codecs
 
     # spec fields added after the first golden artifacts shipped, elided
     # from canonical JSON at their default (same contract as the elided
     # axes: pre-existing spec hashes never drift)
     _ELIDED_FIELDS = (("n_jobs", (1,)), ("n_rails", (1,)),
                       ("jitter_ms", (0.0,)), ("rail_policy", "round-robin"),
-                      ("jitter_seed", 0))
+                      ("jitter_seed", 0), ("codec", ("none",)),
+                      ("error_feedback", False))
 
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
         for f in ("models", "n_servers", "bandwidth_gbps", "transport",
                   "compression_ratio", "topology", "scheduler", "n_jobs",
-                  "n_rails", "jitter_ms"):
+                  "n_rails", "jitter_ms", "codec"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -131,12 +136,12 @@ class ExperimentSpec:
     def expand(self) -> Tuple[Cell, ...]:
         """Cartesian product in stable axis order (model outermost)."""
         return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j),
-                          int(nr), float(jm))
-                     for m, n, bw, t, r, topo, s, j, nr, jm in product(
+                          int(nr), float(jm), cd)
+                     for m, n, bw, t, r, topo, s, j, nr, jm, cd in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
                          self.topology, self.scheduler, self.n_jobs,
-                         self.n_rails, self.jitter_ms))
+                         self.n_rails, self.jitter_ms, self.codec))
 
     @property
     def n_cells(self) -> int:
@@ -144,7 +149,8 @@ class ExperimentSpec:
                 * len(self.bandwidth_gbps) * len(self.transport)
                 * len(self.compression_ratio) * len(self.topology)
                 * len(self.scheduler) * len(self.n_jobs)
-                * len(self.n_rails) * len(self.jitter_ms))
+                * len(self.n_rails) * len(self.jitter_ms)
+                * len(self.codec))
 
     @property
     def workload_units(self) -> int:

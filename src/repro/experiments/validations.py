@@ -311,6 +311,75 @@ def _straggler(cells: Sequence[Dict]) -> Check:
             "jitter0_matches_simulate_bitwise": exact}
 
 
+def _compression(cells: Sequence[Dict]) -> Check:
+    """The compression-regime claims the golden suite gates.
+
+    Compression is priced (encode -> wire -> decode with kernel-calibrated
+    compute), not a free byte divisor, so the gated claims are exactly the
+    ones the divisor cannot express:
+
+    - a ``codec=none`` cell is bit-exact with a ``simulate`` call that
+      never heard of the axis (the codec path is a pass, not a rewrite);
+    - wire bytes are monotone non-increasing in the codec's wire ratio
+      (none >= int8 >= topk:8 >= ternary), per cell twin;
+    - every real-codec cell spends strictly positive encode+decode GPU
+      time (``codec_compute_s > 0``) — nothing is free;
+    - the size-adaptive policy's wire bytes land between the none and
+      int8 twins (it compresses only the large buckets);
+    - the fig13 regimes come out as the paper + follow-ups predict:
+      compression *wins* at 10 Gbps (network-bound) and is *pure
+      overhead* at 100 Gbps (compute-bound baseline).
+    """
+    from repro.core.codec import (REGIME_PURE_OVERHEAD, REGIME_WINS,
+                                  classify_regime)
+    from repro.experiments.spec import axis_value
+    by = {(c["model"], c["bandwidth_gbps"], c["scheduler"],
+           axis_value(c, "n_jobs"), axis_value(c, "codec")): c
+          for c in cells}
+    # wire ratio order: none (1x) < int8 (~3.9x) < topk:8 (8x) < ternary
+    order = ("none", "int8", "topk:8", "ternary")
+    wire = {k: c["wire_bytes_per_worker"] for k, c in by.items()}
+    mono = all(wire[(m, bw, s, j, a)] >= wire[(m, bw, s, j, b)] - 1e-9
+               for (m, bw, s, j, cd) in by if cd == "none"
+               for a, b in zip(order, order[1:]))
+    compute_pos = all(c.get("codec_compute_s", 0.0) > 0.0
+                      for k, c in by.items() if k[4] != "none")
+    adaptive_between = all(
+        wire[(m, bw, s, j, "int8")] - 1e-9
+        <= wire[(m, bw, s, j, "size-adaptive")]
+        <= wire[(m, bw, s, j, "none")] + 1e-9
+        for (m, bw, s, j, cd) in by if cd == "size-adaptive")
+
+    def regime(model: str, bw: float, codec: str) -> str:
+        none = by[(model, bw, "fifo", 1, "none")]
+        c = by[(model, bw, "fifo", 1, codec)]
+        return classify_regime(c["t_overhead"], none["t_overhead"],
+                               none["t_batch"], c["codec_compute_s"])
+
+    wins_10g = all(regime(m, 10.0, "int8") == REGIME_WINS
+                   for m in ("resnet50", "vgg16"))
+    pure_100g = all(regime(m, 100.0, cd) == REGIME_PURE_OVERHEAD
+                    for m in ("resnet50", "vgg16")
+                    for cd in ("int8", "ternary"))
+
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    base = [c for c in cells if axis_value(c, "codec") == "none"
+            and axis_value(c, "n_jobs") == 1]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"], scheduler=c["scheduler"],
+                         n_chunks=8).t_sync == c["t_sync"]
+                for c in base)
+    return {"codec_none_matches_simulate_bitwise": exact,
+            "wire_bytes_monotone_in_ratio": mono,
+            "codec_compute_strictly_positive": compute_pos,
+            "size_adaptive_wire_between_none_and_int8": adaptive_between,
+            "compression_wins_at_10g": wins_10g,
+            "pure_overhead_at_100g": pure_100g}
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -326,6 +395,7 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "xxl-contention": _xxl_contention,
     "multirail": _multirail,
     "straggler": _straggler,
+    "compression": _compression,
 }
 
 

@@ -1,0 +1,358 @@
+"""The priced compression-codec axis: codec resolution and wire formats,
+the encode -> wire -> decode lowering's invariants (byte conservation,
+codec=none bit-exactness, encode-chain monotonicity), legacy
+``compression_ratio`` equivalence, error feedback, size-adaptive policy,
+regime classification (fig13), and the codec axis's spec-hash elision."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.addest import AddEst
+from repro.core.codec import (FALLBACK_PASSES, INT8_WIRE_RATIO, NONE_CODEC,
+                              REGIME_LOSES, REGIME_NEUTRAL,
+                              REGIME_PURE_OVERHEAD, REGIME_WINS,
+                              SIZE_ADAPTIVE_THRESHOLD, TERNARY_WIRE_RATIO,
+                              classify_regime, get_codec, parse_codec)
+from repro.core.network_model import RingAllReduce
+from repro.core.schedule import (CodecLowering, assign_codec, assign_rails,
+                                 codec_compute_seconds, lower_buckets,
+                                 plan_to_flows)
+from repro.core.simulator import simulate, simulate_contention
+from repro.core.timeline import GradTimeline
+from repro.core.transport import GBPS
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _mk_timeline(ready, sizes, t_back=None):
+    t_back = t_back if t_back is not None else (max(ready) if ready else 0.0)
+    return GradTimeline("t", tuple(ready), tuple(sizes), t_back, t_back * 1.5)
+
+
+def _plan(sizes=(8e6, 2e6, 16e6), sched="chunked", k=4):
+    buckets = [(0.01 * i, s, 3) for i, s in enumerate(sizes)]
+    return lower_buckets(buckets, scheduler=sched, n_chunks=k)
+
+
+def _cost(ratio=1.0, n=64, bw=10 * GBPS):
+    return RingAllReduce(n, bw, AddEst.v100(), ratio)
+
+
+# ---------------------------------------------------------------------------
+# codec resolution and wire formats
+# ---------------------------------------------------------------------------
+
+def test_fallback_passes_pinned_to_committed_calibration():
+    # FALLBACK_PASSES (used when the artifact checkout is absent) must
+    # price codecs identically to the committed calibration table the CI
+    # bench job gates against fresh kernel measurements
+    table = json.loads(
+        (REPO / "artifacts" / "bench" / "BENCH_codec.json").read_text())
+    assert set(table["codecs"]) == set(FALLBACK_PASSES)
+    for name, stages in FALLBACK_PASSES.items():
+        assert table["codecs"][name]["encode_passes"] == stages["encode"]
+        assert table["codecs"][name]["decode_passes"] == stages["decode"]
+
+
+def test_parse_codec():
+    assert parse_codec("int8") == ("int8", None)
+    assert parse_codec("topk:8") == ("topk", 8.0)
+    assert parse_codec("ratio:2.5") == ("ratio", 2.5)
+    with pytest.raises(ValueError, match="bad codec parameter"):
+        parse_codec("topk:lots")
+
+
+def test_wire_ratios_match_kernel_block_format():
+    # BLOCK = 256 f32: int8 emits 256 bytes + one f32 scale, ternary packs
+    # 2 bits/element + one f32 scale
+    assert get_codec("int8").wire_ratio == pytest.approx(1024 / 260)
+    assert get_codec("ternary").wire_ratio == pytest.approx(1024 / 68)
+    assert get_codec("topk:8").wire_ratio == 8.0
+    assert get_codec("ratio:4").wire_ratio == 4.0
+    assert INT8_WIRE_RATIO < TERNARY_WIRE_RATIO
+
+
+def test_kernel_codecs_are_priced_and_ratio_is_free():
+    for name in ("int8", "ternary", "topk:8"):
+        c = get_codec(name)
+        assert not c.is_free
+        assert c.encode_seconds(1e6) > 0.0 and c.decode_seconds(1e6) > 0.0
+    assert get_codec("ratio:4").is_free
+    assert NONE_CODEC.is_free and NONE_CODEC.wire_ratio == 1.0
+
+
+def test_legacy_compression_ratio_routes_through_ratio_codec():
+    c = get_codec("none", compression_ratio=10.0)
+    assert c.kind == "ratio" and c.wire_ratio == 10.0 and c.is_free
+
+
+def test_get_codec_rejections():
+    with pytest.raises(ValueError, match="takes no parameter"):
+        get_codec("none:2")
+    with pytest.raises(ValueError, match="takes no parameter"):
+        get_codec("int8:4")
+    with pytest.raises(ValueError, match="intrinsic wire ratio"):
+        get_codec("ternary", compression_ratio=4.0)
+    with pytest.raises(ValueError, match="unknown codec"):
+        get_codec("gzip")
+
+
+def test_error_feedback_prices_residual_and_rejects_free_codecs():
+    c = get_codec("int8")
+    ef = c.with_error_feedback()
+    assert ef.name == "int8+ef"
+    assert ef.encode_seconds(1e6) > c.encode_seconds(1e6)
+    assert ef.decode_seconds(1e6) == c.decode_seconds(1e6)
+    with pytest.raises(ValueError, match="lossy codec"):
+        get_codec("ratio:4").with_error_feedback()
+
+
+# ---------------------------------------------------------------------------
+# assign_codec: stamping preserves the IR's conserved quantity
+# ---------------------------------------------------------------------------
+
+def test_assign_codec_none_uniform_is_same_object():
+    plan = _plan()
+    assert assign_codec(plan, "none") is plan
+
+
+def test_assign_codec_preserves_total_bytes_and_structure():
+    plan = _plan()
+    for codec, policy in (("int8", "uniform"), ("ternary", "size-adaptive")):
+        stamped = assign_codec(plan, codec, policy=policy)
+        assert stamped.total_bytes == plan.total_bytes
+        assert stamped.n_buckets == plan.n_buckets
+        assert [op.op_id for op in stamped.ops] == \
+            [op.op_id for op in plan.ops]
+        assert [op.size for op in stamped.ops] == \
+            [op.size for op in plan.ops]
+
+
+def test_assign_codec_size_adaptive_is_per_bucket_threshold():
+    small, large = 1e3, 1e6
+    plan = _plan(sizes=(small, large), sched="chunked", k=4)
+    stamped = assign_codec(plan, "int8", policy="size-adaptive",
+                           threshold=SIZE_ADAPTIVE_THRESHOLD)
+    by_bucket = {}
+    for op in stamped.ops:
+        by_bucket.setdefault(op.bucket_id, set()).add(op.codec)
+    # all chunks of a bucket agree; small bucket stays uncompressed
+    assert by_bucket[0] == {"none"}
+    assert by_bucket[1] == {"int8"}
+
+
+def test_assign_codec_rejects_unknown_policy():
+    with pytest.raises(KeyError, match="unknown codec policy"):
+        assign_codec(_plan(), "int8", policy="per-tensor")
+
+
+# ---------------------------------------------------------------------------
+# plan_to_flows: the encode -> wire -> decode lowering
+# ---------------------------------------------------------------------------
+
+def test_codec_none_lowering_bit_identical_to_no_codecs():
+    plan = _plan()
+    cost = _cost()
+    legacy = plan_to_flows(plan, cost, 5e-6)
+    table = {"none": CodecLowering(NONE_CODEC, cost)}
+    priced = plan_to_flows(plan, cost, 5e-6, codecs=table)
+    assert legacy == priced
+
+
+def test_codec_lowering_keeps_one_flow_per_op_and_shifts_ready():
+    plan = _plan()
+    base_cost = _cost()
+    codec = get_codec("int8")
+    stamped = assign_codec(plan, "int8")
+    table = {"int8": CodecLowering(codec, _cost(codec.wire_ratio))}
+    legacy = plan_to_flows(plan, base_cost, 5e-6)
+    priced = plan_to_flows(stamped, base_cost, 5e-6, codecs=table)
+    assert len(priced) == len(legacy) == len(plan.ops)
+    prev_ready = 0.0
+    for lo, hi in zip(legacy, priced):
+        assert hi.op_id == lo.op_id
+        # encode runs after the bucket flush, so ready can only move later
+        assert hi.ready > lo.ready
+        # the encode chain is serialized on the GPU: non-decreasing starts
+        assert hi.ready >= prev_ready
+        prev_ready = hi.ready
+        # the wire shrinks by the codec ratio; decode pads the latency
+        assert hi.work < lo.work
+        assert hi.latency > 0.0
+
+
+def test_codec_compute_seconds_counts_both_stages_once():
+    plan = assign_codec(_plan(), "int8")
+    codec = get_codec("int8")
+    table = {"int8": CodecLowering(codec, _cost(codec.wire_ratio))}
+    total = codec_compute_seconds(plan, table)
+    by_hand = 0.0
+    for op in plan.ops:
+        launch = 2 * codec.launch_overhead if op.chunk == 0 else 0.0
+        by_hand += launch + codec.encode_seconds(op.size) \
+            + codec.decode_seconds(op.size)
+    assert total == pytest.approx(by_hand, rel=1e-12)
+    assert codec_compute_seconds(plan, None) == 0.0
+
+
+def test_codec_lowering_composes_with_rails():
+    codec = get_codec("int8")
+    plan = assign_codec(assign_rails(_plan(), 2), "int8")
+    table = {"int8": CodecLowering(codec, _cost(codec.wire_ratio))}
+    flows = plan_to_flows(plan, _cost(), 5e-6, n_rails=2, codecs=table)
+    lanes = {f.job for f in flows}
+    # rail 0 keeps the plain job lane, matching the legacy rail lowering
+    assert lanes == {"job0", "job0@r1"}
+    assert len(flows) == len(plan.ops)
+
+
+# ---------------------------------------------------------------------------
+# simulate: end-to-end equivalences and physics
+# ---------------------------------------------------------------------------
+
+_TL = _mk_timeline([0.0, 0.02, 0.05], [30e6, 10e6, 60e6], t_back=0.06)
+_SIM = dict(n_workers=64, bandwidth=10 * GBPS, transport="ideal",
+            scheduler="chunked", n_chunks=4)
+
+
+def test_simulate_codec_none_bit_identical_to_no_kwarg():
+    base = simulate(_TL, **_SIM)
+    priced = simulate(_TL, codec="none", **_SIM)
+    assert base.to_dict() == priced.to_dict()
+    assert "codec" not in base.to_dict()          # elided at default
+
+
+def test_simulate_legacy_ratio_bit_identical_to_ratio_codec():
+    # the deprecated NetworkModel.compression_ratio byte divisor and the
+    # parametric ratio codec must be the same arithmetic, to the bit
+    legacy = simulate(_TL, compression_ratio=10.0, **_SIM)
+    ratio = simulate(_TL, codec="ratio:10", **_SIM)
+    assert legacy.t_sync == ratio.t_sync
+    assert legacy.t_overhead == ratio.t_overhead
+    assert legacy.wire_bytes_per_worker == ratio.wire_bytes_per_worker
+    assert ratio.codec_compute_s == 0.0
+
+
+def test_simulate_codec_record_and_wire_bytes():
+    none = simulate(_TL, **_SIM)
+    int8 = simulate(_TL, codec="int8", **_SIM)
+    d = int8.to_dict()
+    assert d["codec"] == "int8"
+    assert int8.codec_compute_s > 0.0
+    assert int8.wire_bytes_per_worker == pytest.approx(
+        none.wire_bytes_per_worker / INT8_WIRE_RATIO, rel=1e-12)
+
+
+def test_simulate_codec_wins_when_network_bound():
+    none = simulate(_TL, **_SIM)
+    int8 = simulate(_TL, codec="int8", **_SIM)
+    assert int8.t_overhead < none.t_overhead
+    assert int8.scaling_factor > none.scaling_factor
+
+
+def test_simulate_error_feedback_adds_encode_cost():
+    plain = simulate(_TL, codec="int8", **_SIM)
+    ef = simulate(_TL, codec="int8", error_feedback=True, **_SIM)
+    assert ef.codec_compute_s > plain.codec_compute_s
+    assert ef.t_sync >= plain.t_sync
+    with pytest.raises(ValueError, match="lossy codec"):
+        simulate(_TL, codec="none", error_feedback=True, **_SIM)
+
+
+def test_simulate_size_adaptive_between_none_and_int8():
+    tl = _mk_timeline([0.0, 0.02], [1e3, 60e6], t_back=0.03)
+    kw = dict(_SIM, comm=None)
+    none = simulate(tl, **kw)
+    int8 = simulate(tl, codec="int8", **kw)
+    ada = simulate(tl, codec="size-adaptive", **kw)
+    assert int8.wire_bytes_per_worker <= ada.wire_bytes_per_worker \
+        <= none.wire_bytes_per_worker
+    assert ada.to_dict()["codec"] == "size-adaptive"
+
+
+def test_simulate_codec_composes_with_rails_and_jitter():
+    # the PR-4 scenario axes must keep working under a priced codec, and
+    # codec=none must stay bit-exact on those paths
+    kw = dict(_SIM, n_rails=2, jitter=1e-3, jitter_seed=7)
+    base = simulate(_TL, **kw)
+    none = simulate(_TL, codec="none", **kw)
+    assert base.to_dict() == none.to_dict()
+    int8 = simulate(_TL, codec="int8", **kw)
+    assert int8.t_sync > 0.0 and int8.codec_compute_s > 0.0
+    assert int8.wire_bytes_per_worker < base.wire_bytes_per_worker
+
+
+def test_contention_single_job_codec_degenerates_to_simulate():
+    (shared,) = simulate_contention([_TL], codec="ternary", **_SIM)
+    alone = simulate(_TL, codec="ternary", **_SIM)
+    assert shared.t_sync == pytest.approx(alone.t_sync, rel=1e-12)
+    assert shared.codec_compute_s == pytest.approx(alone.codec_compute_s,
+                                                   rel=1e-12)
+
+
+def test_contention_codec_relieves_shared_link():
+    jobs = [_TL, _TL]
+    none = simulate_contention(jobs, **_SIM)
+    int8 = simulate_contention(jobs, codec="int8", **_SIM)
+    for n, c in zip(none, int8):
+        assert c.t_overhead < n.t_overhead
+
+
+# ---------------------------------------------------------------------------
+# regime classification (fig13)
+# ---------------------------------------------------------------------------
+
+def test_classify_regime_all_four_outcomes():
+    # real baseline overhead, materially reduced -> wins
+    assert classify_regime(0.1, 0.5, 1.0, 1e-3) == REGIME_WINS
+    # compute outweighs wire savings -> loses
+    assert classify_regime(0.8, 0.5, 1.0, 1e-3) == REGIME_LOSES
+    # negligible baseline: compression had nothing to buy
+    assert classify_regime(3e-4, 4e-4, 1.0, 1e-3) == REGIME_PURE_OVERHEAD
+    # free codec on a negligible baseline changes nothing
+    assert classify_regime(4e-4, 4e-4, 1.0, 0.0) == REGIME_NEUTRAL
+
+
+def test_classify_regime_micro_delta_on_negligible_baseline():
+    # a tiny improvement on an already-negligible overhead must NOT count
+    # as a win — the nothing-to-win check runs first
+    assert classify_regime(3.3e-4, 3.4e-4, 0.43, 2e-3) \
+        == REGIME_PURE_OVERHEAD
+
+
+# ---------------------------------------------------------------------------
+# the experiments axis: elision keeps pre-codec artifacts bit-stable
+# ---------------------------------------------------------------------------
+
+def test_codec_axis_elided_at_default():
+    from repro.experiments import GRIDS, Cell, ExperimentSpec
+    cell = Cell("resnet50", 8, 10.0, "ideal", 1.0, "ring")
+    assert "codec" not in cell.to_dict()
+    assert Cell.from_dict(cell.to_dict()) == cell
+    stamped = Cell("resnet50", 8, 10.0, "ideal", 1.0, "ring", codec="int8")
+    assert stamped.to_dict()["codec"] == "int8"
+    assert Cell.from_dict(stamped.to_dict()) == stamped
+    # pre-codec grids keep their canonical JSON — and hence spec hash,
+    # the golden-artifact gate
+    assert "codec" not in GRIDS["paper-fig1"].canonical_json()
+    a = ExperimentSpec(name="t")
+    b = ExperimentSpec(name="t", codec=("none", "int8"))
+    assert a.spec_hash() != b.spec_hash()
+    assert "codec" not in a.canonical_json()
+
+
+def test_codec_axis_expands_last():
+    from repro.experiments import ExperimentSpec
+    spec = ExperimentSpec(name="t", models=("a",), codec=("none", "int8"))
+    cells = spec.expand()
+    assert spec.n_cells == len(cells) == 2
+    assert [c.codec for c in cells] == ["none", "int8"]
+
+
+def test_compression_grid_registered_and_gated():
+    from repro.experiments import GRIDS, SUITES
+    spec = GRIDS["compression"]
+    assert set(spec.codec) == {"none", "int8", "ternary", "topk:8",
+                               "size-adaptive"}
+    assert SUITES["compression"] == ("compression",)

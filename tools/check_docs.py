@@ -10,6 +10,11 @@ Two checks over README.md, ROADMAP.md, and docs/*.md:
    real CLI parser (``repro.experiments.cli.build_parser``), i.e. a
    ``--help``-level smoke test with no simulation run.
 
+Plus one cross-reference check: every committed golden artifact
+(``artifacts/golden/*.json``) must be named in both the CI workflow
+(``.github/workflows/ci.yml`` — so it actually gates something) and
+``docs/GOLDEN_ARTIFACTS.md`` (so its refresh procedure is documented).
+
 Snippets containing an obvious placeholder (``<suite>``, ``...``,
 ``{run,...}``) are skipped as templates.  The gate also enforces a floor
 on how many lines/names it found, so a regex regression cannot silently
@@ -102,6 +107,32 @@ def check_file(path: Path, known: set, parser) -> Tuple[List[str], int, int]:
     return failures, n_grids, n_lines
 
 
+def check_golden_references() -> Tuple[List[str], int]:
+    """Every artifacts/golden/*.json must be gated in CI and documented.
+
+    An artifact that CI never compares is dead weight that silently rots;
+    one missing from docs/GOLDEN_ARTIFACTS.md has no refresh procedure."""
+    failures: List[str] = []
+    goldens = sorted((REPO / "artifacts" / "golden").glob("*.json"))
+    refs = {
+        ".github/workflows/ci.yml": "gated by the sim-regression job",
+        "docs/GOLDEN_ARTIFACTS.md": "documented with a refresh command",
+    }
+    texts = {rel: (REPO / rel).read_text() if (REPO / rel).exists() else None
+             for rel in refs}
+    for rel, text in texts.items():
+        if text is None:
+            failures.append(f"{rel}: file is missing (golden artifacts "
+                            f"must be {refs[rel]})")
+    for path in goldens:
+        for rel, text in texts.items():
+            if text is not None and path.name not in text:
+                failures.append(
+                    f"artifacts/golden/{path.name}: not named in {rel} "
+                    f"(every golden artifact must be {refs[rel]})")
+    return failures, len(goldens)
+
+
 def main() -> int:
     from repro.experiments import grids
     from repro.experiments.cli import build_parser
@@ -123,6 +154,14 @@ def main() -> int:
         print(f"{rel}: {n_grids} --grid mention(s), "
               f"{n_lines} CLI line(s) checked")
 
+    golden_fails, n_goldens = check_golden_references()
+    failures.extend(golden_fails)
+    print(f"artifacts/golden: {n_goldens} golden artifact(s) "
+          f"cross-referenced against ci.yml and docs/GOLDEN_ARTIFACTS.md")
+    if n_goldens == 0:
+        failures.append("extractor found no artifacts/golden/*.json; "
+                        "the golden cross-reference check may have rotted")
+
     if total_lines < MIN_CLI_LINES:
         failures.append(
             f"extractor found only {total_lines} CLI lines "
@@ -137,8 +176,8 @@ def main() -> int:
         for f in failures:
             print(f"FAIL: {f}")
         return 1
-    print(f"docs OK: {total_grids} grid mentions and {total_lines} CLI "
-          f"lines all resolve")
+    print(f"docs OK: {total_grids} grid mentions, {total_lines} CLI "
+          f"lines, and {n_goldens} golden artifacts all resolve")
     return 0
 
 
