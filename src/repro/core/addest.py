@@ -37,6 +37,16 @@ class AddEst:
             return 0.0
         return float(np.interp(x, self.sizes, self.times))
 
+    def batch(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`__call__` over a float64 size column.
+
+        ``np.interp`` evaluates each element with the same compiled
+        interpolation the scalar call uses, so ``batch(x)[i]`` is
+        bit-identical to ``self(x[i])`` — the columnar lowering
+        (:func:`repro.core.schedule.plan_to_flow_batch`) relies on this.
+        """
+        return np.where(x <= 0.0, 0.0, np.interp(x, self.sizes, self.times))
+
     # -- constructors --------------------------------------------------------
 
     @staticmethod

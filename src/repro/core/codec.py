@@ -132,7 +132,12 @@ class Codec:
 
     def encode_seconds(self, nbytes: float) -> float:
         """Linear encode cost of ``nbytes`` uncompressed gradient bytes
-        (launch overhead is charged separately, once per bucket)."""
+        (launch overhead is charged separately, once per bucket).
+
+        Pure scalar arithmetic, so a numpy array of sizes broadcasts
+        elementwise — ``schedule.plan_to_flow_batch`` relies on that to
+        price whole codec groups in one call, bit-identical to the
+        per-op scalar calls."""
         return (self.encode_passes * PROBE_BYTES_PER_BYTE * nbytes
                 / self.mem_bw)
 

@@ -76,6 +76,16 @@ of flows.  This version is indexed end to end:
   prefix to the bulk chain decomposition, with the gating boundary folded
   into the job's violation point; the sorted suffix left after a commit
   is itself a valid heap, so no re-heapify is needed.
+- **multi-link bulk window**: when the spin attempts a bulk commit, other
+  links' *valid* projected completions at the front of the calendar would
+  artificially fence the window at the first foreign event.  If such a
+  link is itself bulk-eligible and **self-contained** (every job in its
+  heap runs all of its flows on that link, so nothing it commits can
+  admit work elsewhere), its calendar entry is parked, the window extends
+  to the first non-parkable event, and each parked link retires its own
+  saturated stretch against the same fence — one window, all eligible
+  links.  A parked link's first completion uses the exact time its
+  calendar entry carried, so the arithmetic is the scalar loop's.
 - **small-plan setup**: the columnar numpy views that pay for themselves on
   thousand-flow plans cost more than the whole event loop on the two-dozen-
   op plans the paper grids generate, so below
@@ -88,6 +98,37 @@ Termination is progress-based: the engine raises only when the calendar
 drains with flows outstanding, or when event processing stops advancing
 time, admitting, or completing — not on an iteration-count heuristic, which
 could false-trip on heavily contended multi-job plans.
+
+Columnar batches (structure-of-arrays end to end)
+-------------------------------------------------
+
+:class:`FlowBatch` is the columnar twin of a ``FlowSpec`` list: one numpy
+record batch (float64 ``ready``/``work``/``latency``/``priority``/
+``duration`` columns, a bool ``hold`` column, ``intp`` ``op_id``/``rail``
+columns, and *interned* job/link name tables with ``intp`` code columns).
+``NetworkEngine.run_batch`` consumes it directly — the large-plan setup
+becomes one global lexsort plus per-job column slices, with no tuple
+materialization on either side (results come back as a
+:class:`ResultBatch`).  The glue is O(columns), not O(flows):
+
+- :meth:`FlowBatch.relabel` replaces ``schedule.clone_flows`` — a
+  contention cell relabels the shared lowering per job by rewriting the
+  interned *name table* and shifting ``op_id``; every float column is the
+  same array object;
+- :func:`perturb_batch` replaces :func:`perturb_flows` — the same RNG
+  stream, one vectorized ``ready + delays`` (elementwise float64 adds are
+  the scalar adds, so jittered batches are bit-identical to the tuple
+  path);
+- :func:`concat_batches` merges per-job batches for one engine call,
+  re-interning names in first-appearance order.
+
+The name tables preserve **first-appearance order** by construction
+(interning, relabeling, and concatenation all keep it), which is what
+makes the columnar setup's calendar insertion order — and therefore every
+same-time admission tie-break — identical to the tuple path's.  Plans
+below :data:`_SMALL_PLAN_MAX_FLOWS` bounce to the list path unchanged.
+``run(flows)`` above the threshold routes through the same batch core, so
+there is exactly one large-plan engine.
 
 Multi-rail links
 ----------------
@@ -106,7 +147,7 @@ which is exactly what distinguishes a 2x50G multi-rail host from a single
 from __future__ import annotations
 
 from heapq import heapify, heappop, heappush
-from typing import Dict, List, NamedTuple, Optional, Sequence
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -115,6 +156,7 @@ DEFAULT_JOB = "job0"
 
 _DONE, _ADMIT = 0, 1       # calendar event kinds; completions sort first
 _INF = float("inf")
+_NAN = float("nan")
 
 
 class FlowSpec(NamedTuple):
@@ -199,6 +241,9 @@ def perturb_flows(flows: Sequence[FlowSpec], jitter: float, seed: int,
       ``t_sync`` monotonicity validator rests on this;
     - ``jitter <= 0`` returns the flows unchanged (same objects), keeping
       the zero-jitter path bit-exact with a run that never heard of jitter.
+
+    :func:`perturb_batch` is the columnar twin: same RNG construction,
+    same float adds, bit-identical ready times.
     """
     if jitter <= 0.0 or not flows:
         return list(flows)
@@ -206,6 +251,253 @@ def perturb_flows(flows: Sequence[FlowSpec], jitter: float, seed: int,
         np.random.SeedSequence(entropy=int(seed), spawn_key=(int(stream),)))
     delays = (jitter * rng.standard_exponential(len(flows))).tolist()
     return [f._replace(ready=f.ready + d) for f, d in zip(flows, delays)]
+
+
+# ---------------------------------------------------------------------------
+# columnar batches: structure-of-arrays flows and results
+# ---------------------------------------------------------------------------
+
+def _intern(names: Sequence[str]) -> Tuple[Tuple[str, ...], np.ndarray]:
+    """Name column -> (first-appearance-ordered table, intp code column)."""
+    table: Dict[str, int] = {}
+    codes = np.empty(len(names), dtype=np.intp)
+    for i, nm in enumerate(names):
+        c = table.get(nm)
+        if c is None:
+            c = table[nm] = len(table)
+        codes[i] = c
+    return tuple(table), codes
+
+
+class FlowBatch(NamedTuple):
+    """A columnar batch of flows: the structure-of-arrays ``FlowSpec`` list.
+
+    Float columns are float64 (``duration`` holds NaN where a ``FlowSpec``
+    would hold ``None``); ``op_id``/``rail`` are ``intp``; ``job``/``link``
+    are ``intp`` codes into the interned ``jobs``/``links`` name tables.
+    Invariant: the name tables are in **first-appearance order** along the
+    batch — every constructor here preserves it, and the engine's columnar
+    setup relies on it to reproduce the tuple path's calendar insertion
+    order (and therefore every same-time tie-break) exactly.
+
+    Batches are immutable in the NamedTuple sense; ``relabel`` and
+    :func:`perturb_batch` share every column they do not change.
+    """
+
+    op_id: np.ndarray
+    ready: np.ndarray
+    work: np.ndarray
+    latency: np.ndarray
+    priority: np.ndarray
+    duration: np.ndarray             # NaN = no precomputed duration
+    hold: np.ndarray                 # bool
+    jobs: Tuple[str, ...]            # interned names, first-appearance order
+    job: np.ndarray                  # intp codes into ``jobs``
+    links: Tuple[str, ...]
+    link: np.ndarray                 # intp codes into ``links``
+    rail: np.ndarray                 # intp
+
+    @property
+    def n(self) -> int:
+        return int(self.op_id.shape[0])
+
+    @classmethod
+    def from_flows(cls, flows: Sequence[FlowSpec]) -> "FlowBatch":
+        """Columnarize a flow list (``None`` durations become NaN)."""
+        if not flows:
+            return _EMPTY_BATCH
+        (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
+         du_col, rl_col) = zip(*flows)
+        jobs, jcode = _intern(job_col)
+        links, lcode = _intern(lk_col)
+        return cls(
+            op_id=np.asarray(op_col, dtype=np.intp),
+            ready=np.asarray(rdy_col, dtype=np.float64),
+            work=np.asarray(wk_col, dtype=np.float64),
+            latency=np.asarray(lt_col, dtype=np.float64),
+            priority=np.asarray(pr_col, dtype=np.float64),
+            duration=np.array([_NAN if d is None else d for d in du_col]),
+            hold=np.asarray(hd_col, dtype=bool),
+            jobs=jobs, job=jcode, links=links, link=lcode,
+            rail=np.asarray(rl_col, dtype=np.intp))
+
+    def to_flows(self) -> List[FlowSpec]:
+        """Materialize the tuple view (NaN durations become ``None``)."""
+        jobs, links = self.jobs, self.links
+        du = [None if d != d else d for d in self.duration.tolist()]
+        rows = zip(self.op_id.tolist(), self.ready.tolist(),
+                   self.work.tolist(), self.latency.tolist(),
+                   self.priority.tolist(),
+                   [jobs[c] for c in self.job.tolist()],
+                   [links[c] for c in self.link.tolist()],
+                   self.hold.tolist(), du, self.rail.tolist())
+        new = tuple.__new__
+        return [new(FlowSpec, row) for row in rows]
+
+    def relabel(self, op_id_base: int, job: str,
+                old_job: str = DEFAULT_JOB) -> "FlowBatch":
+        """O(names) relabel for another identical co-located job.
+
+        The columnar twin of :func:`repro.core.schedule.clone_flows`:
+        rewrites the interned job-name table (``old_job`` prefix ->
+        ``job``, covering the rail lanes ``old_job@r<k>``) and shifts
+        ``op_id``; every float column is shared, so an n-job contention
+        cell pays one lowering and n column relabels.  ``op_id_base == 0``
+        with ``job == old_job`` returns ``self``.
+        """
+        if op_id_base == 0 and job == old_job:
+            return self
+        shift = len(old_job)
+        jobs = tuple(job + nm[shift:] if nm.startswith(old_job) else nm
+                     for nm in self.jobs)
+        return self._replace(op_id=self.op_id + op_id_base, jobs=jobs)
+
+
+_EMPTY_BATCH = FlowBatch(
+    op_id=np.zeros(0, dtype=np.intp), ready=np.zeros(0), work=np.zeros(0),
+    latency=np.zeros(0), priority=np.zeros(0), duration=np.zeros(0),
+    hold=np.zeros(0, dtype=bool), jobs=(), job=np.zeros(0, dtype=np.intp),
+    links=(), link=np.zeros(0, dtype=np.intp),
+    rail=np.zeros(0, dtype=np.intp))
+
+
+class ResultBatch(NamedTuple):
+    """Columnar flow results, aligned with the batch that produced them."""
+
+    op_id: np.ndarray
+    jobs: Tuple[str, ...]
+    job: np.ndarray                  # intp codes into ``jobs``
+    start: np.ndarray
+    wire_end: np.ndarray
+    end: np.ndarray
+    contended: np.ndarray            # bool
+
+    @property
+    def n(self) -> int:
+        return int(self.op_id.shape[0])
+
+    @property
+    def occupancy(self) -> np.ndarray:
+        return self.end - self.start
+
+    def to_results(self) -> List[FlowResult]:
+        jobs = self.jobs
+        rows = zip(self.op_id.tolist(),
+                   [jobs[c] for c in self.job.tolist()],
+                   self.start.tolist(), self.wire_end.tolist(),
+                   self.end.tolist(), self.contended.tolist())
+        new = tuple.__new__
+        return [new(FlowResult, row) for row in rows]
+
+
+def concat_batches(batches: Iterable[FlowBatch]) -> FlowBatch:
+    """Concatenate batches, re-interning names in first-appearance order.
+
+    The columnar twin of ``all_flows.extend(...)`` across jobs: per-batch
+    name tables merge through a small LUT (O(names) python work), code
+    columns remap vectorized, float columns concatenate.
+    """
+    bs = [b for b in batches]
+    if not bs:
+        return _EMPTY_BATCH
+    if len(bs) == 1:
+        return bs[0]
+    job_table: Dict[str, int] = {}
+    link_table: Dict[str, int] = {}
+    job_cols = []
+    link_cols = []
+    for b in bs:
+        jl = np.empty(len(b.jobs), dtype=np.intp)
+        for k, nm in enumerate(b.jobs):
+            c = job_table.get(nm)
+            if c is None:
+                c = job_table[nm] = len(job_table)
+            jl[k] = c
+        job_cols.append(jl[b.job] if len(b.jobs) else b.job)
+        ll = np.empty(len(b.links), dtype=np.intp)
+        for k, nm in enumerate(b.links):
+            c = link_table.get(nm)
+            if c is None:
+                c = link_table[nm] = len(link_table)
+            ll[k] = c
+        link_cols.append(ll[b.link] if len(b.links) else b.link)
+    return FlowBatch(
+        op_id=np.concatenate([b.op_id for b in bs]),
+        ready=np.concatenate([b.ready for b in bs]),
+        work=np.concatenate([b.work for b in bs]),
+        latency=np.concatenate([b.latency for b in bs]),
+        priority=np.concatenate([b.priority for b in bs]),
+        duration=np.concatenate([b.duration for b in bs]),
+        hold=np.concatenate([b.hold for b in bs]),
+        jobs=tuple(job_table), job=np.concatenate(job_cols),
+        links=tuple(link_table), link=np.concatenate(link_cols),
+        rail=np.concatenate([b.rail for b in bs]))
+
+
+def perturb_batch(batch: FlowBatch, jitter: float, seed: int,
+                  stream: int = 0) -> FlowBatch:
+    """Columnar :func:`perturb_flows`: one vectorized ``ready + delays``.
+
+    Same RNG construction and draw count, and elementwise float64 adds are
+    exactly the scalar adds — a perturbed batch is bit-identical to
+    perturbing the tuple view.  ``jitter <= 0`` returns ``batch`` itself.
+    """
+    if jitter <= 0.0 or not batch.n:
+        return batch
+    rng = np.random.default_rng(
+        np.random.SeedSequence(entropy=int(seed), spawn_key=(int(stream),)))
+    delays = jitter * rng.standard_exponential(batch.n)
+    return batch._replace(ready=batch.ready + delays)
+
+
+def serialized_chain(ready: np.ndarray, dur: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized max-plus recurrence, bit-exact with the serial loop.
+
+    Solves ``start_i = max(ready_i, end_{i-1}); end_i = start_i + dur_i``
+    with numpy.  Exactness hinges on two properties: ``np.cumsum`` is a
+    strict left fold (the same float additions in the same order as the
+    serial loop), and folding each chain's start into the summand array
+    (``cumsum([ready_j, dur_j, ...])``) preserves the serial association
+    ``((ready_j + dur_j) + dur_{j+1}) + ...``.
+
+    Chain starts (indices where the resource went idle) are found
+    iteratively: begin with the superset ``ready_i >= ready_{i-1} +
+    dur_{i-1}`` (every true chain start satisfies it, since ``end >= ready
+    + dur``), compute ends as if those were the starts, then demote any
+    candidate whose gap closes (``ready_j < end_{j-1}``).  Ends only grow
+    when chains merge, so each pass removes at least one false candidate
+    and the fixpoint makes exactly the serial loop's max choices.
+
+    Serves both the simulator's closed-form fifo fast path and the codec
+    encode chain in :func:`repro.core.schedule.plan_to_flow_batch` (a naive
+    ``np.maximum.accumulate`` would re-associate the adds and drift).
+    """
+    n = ready.shape[0]
+    cand = np.empty(n, dtype=bool)
+    cand[0] = True
+    if n > 1:
+        cand[1:] = ready[1:] >= ready[:-1] + dur[:-1]
+    starts = np.empty(n)
+    ends = np.empty(n)
+    for _ in range(n):
+        idx = np.flatnonzero(cand)
+        if idx.shape[0] == n:
+            # every op finds the resource idle: no queueing anywhere
+            starts[:] = ready
+            ends[:] = ready + dur
+        else:
+            bounds = np.append(idx, n)
+            for a, b in zip(bounds[:-1], bounds[1:]):
+                seg = np.cumsum(np.concatenate(([ready[a]], dur[a:b])))
+                starts[a] = ready[a]
+                starts[a + 1:b] = seg[1:-1]
+                ends[a:b] = seg[1:]
+        bad = idx[1:][ready[idx[1:]] < ends[idx[1:] - 1]]
+        if not bad.shape[0]:
+            return starts, ends
+        cand[bad] = False
+    raise AssertionError("closed-form chain decomposition did not converge")
 
 
 class _Link:
@@ -341,14 +633,31 @@ class NetworkEngine:
         self.rails = dict(rails or {})
 
     def run(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
-        """Execute ``flows``; returns results in input order."""
-        n_total = len(flows)
-        if not n_total:
-            return []
-        caps = self.capacities
-        small = n_total < _SMALL_PLAN_MAX_FLOWS
+        """Execute ``flows``; returns results in input order.
 
-        # -- setup: columnar views, grouping, service order, mode -----------
+        Plans below :data:`_SMALL_PLAN_MAX_FLOWS` run the plain-list setup;
+        anything larger columnarizes once and runs the batch core — the
+        same engine :meth:`run_batch` uses, so tuple and batch callers
+        share one large-plan code path (and its bit-identity proofs).
+        """
+        if not flows:
+            return []
+        if len(flows) < _SMALL_PLAN_MAX_FLOWS:
+            return self._run_small(flows)
+        return self.run_batch(FlowBatch.from_flows(flows)).to_results()
+
+    def _run_small(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
+        """Plain-list setup and event loop for paper-size plans.
+
+        No numpy anywhere: columnar setup costs more than the whole event
+        loop below :data:`_SMALL_PLAN_MAX_FLOWS`, and the bulk path can
+        never engage on the single-job plans this size.  The scalar event
+        loop is the same as the batch core's, so results are bit-identical
+        across the two setups.
+        """
+        n_total = len(flows)
+        caps = self.capacities
+
         (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
          _du_col, rl_col) = zip(*flows)
 
@@ -360,12 +669,10 @@ class NetworkEngine:
                     for nm in set(lk_col)}
             link_of = [sets[nm].rails[r % len(sets[nm].rails)]
                        for nm, r in zip(lk_col, rl_col)]
-            one_link = sum(len(s.rails) for s in sets.values()) == 1
         else:
             links: Dict[str, _Link] = {
                 nm: _Link(caps.get(nm, 1.0)) for nm in set(lk_col)}
             link_of = list(map(links.__getitem__, lk_col))
-            one_link = len(links) == 1
 
         by_job: Dict[str, List[int]] = {}
         for i, name in enumerate(job_col):
@@ -376,38 +683,17 @@ class NetworkEngine:
         jobs: Dict[str, _Job] = {name: _Job() for name in by_job}
         job_of = list(map(jobs.__getitem__, job_col))
 
-        if small:
-            pr_np = op_np = rd_np = None
-        else:
-            pr_np = np.asarray(pr_col)
-            op_np = np.asarray(op_col)
-            rd_np = np.asarray(rdy_col)
-        g_wk = g_hd = g_lt = None           # global columns (lazy, for bulk)
-
         cal: List = []              # (time, kind, seq, ...) event calendar
         seq = 0
         for name, idxs in by_job.items():
             jb = jobs[name]
-            if small:
-                # plain-list service order: identical (priority, op_id)
-                # total order, without paying numpy's fixed costs
-                if len(idxs) > 1:
-                    idxs.sort(key=lambda i: (pr_col[i], op_col[i]))
-                order = jb.order = idxs
-                rdy = jb.rdy = [rdy_col[i] for i in order]
-                monotone = all(a <= b for a, b in zip(rdy, rdy[1:]))
-            else:
-                ix = np.asarray(idxs, dtype=np.intp)
-                if ix.shape[0] > 1:
-                    ix = ix[np.lexsort((op_np[ix], pr_np[ix]))]
-                order = jb.order = ix.tolist()
-                rd_ix = rd_np[ix]
-                rdy = jb.rdy = rd_ix.tolist()
-                monotone = (len(rdy) == 1
-                            or bool((rd_ix[1:] >= rd_ix[:-1]).all()))
-            first = link_of[order[0]]
-            jb.link = first if one_link or all(link_of[i] is first
-                                               for i in order) else None
+            # plain-list service order: identical (priority, op_id)
+            # total order, without paying numpy's fixed costs
+            if len(idxs) > 1:
+                idxs.sort(key=lambda i: (pr_col[i], op_col[i]))
+            order = jb.order = idxs
+            rdy = jb.rdy = [rdy_col[i] for i in order]
+            monotone = all(a <= b for a, b in zip(rdy, rdy[1:]))
             if monotone:
                 trigger = rdy[0]
             else:
@@ -415,31 +701,18 @@ class NetworkEngine:
                 # plans): gate admissions on ready order.  ``order`` is
                 # already (priority, op_id)-sorted, so sorting *positions*
                 # stably by ready yields (ready, priority, op_id) order.
-                if small:
-                    jb.gated = sorted((rdy_col[i], pr_col[i], op_col[i], i)
-                                      for i in order)
-                    jb.readyq = []
-                    trigger = jb.gated[0][0]
-                else:
-                    g_pos = np.argsort(rd_ix, kind="stable")
-                    jb.gated = g_pos
-                    jb.g_rd = rd_ix[g_pos]
-                    jb.readyq = np.zeros(len(order), dtype=bool)
-                    trigger = float(jb.g_rd[0])
+                jb.gated = sorted((rdy_col[i], pr_col[i], op_col[i], i)
+                                  for i in order)
+                jb.readyq = []
+                trigger = jb.gated[0][0]
             seq += 1
             cal.append((trigger if trigger > 0.0 else 0.0, _ADMIT, seq, jb))
         heapify(cal)                # one pass beats n pushes at setup
 
-        if small:
-            start: List[float] = [0.0] * n_total
-            wire: List[float] = [0.0] * n_total
-            end: List[float] = [0.0] * n_total
-            contended: List[bool] = [False] * n_total
-        else:
-            start = np.zeros(n_total)
-            wire = np.zeros(n_total)
-            end = np.zeros(n_total)
-            contended = np.zeros(n_total, dtype=bool)
+        start: List[float] = [0.0] * n_total
+        wire: List[float] = [0.0] * n_total
+        end: List[float] = [0.0] * n_total
+        contended: List[bool] = [False] * n_total
         n_done = 0
         stale = 0                   # consecutive no-progress calendar pops
         stall_limit = _STALL_FACTOR * n_total + _STALL_BASE
@@ -488,14 +761,9 @@ class NetworkEngine:
                     seq += 1
                     heappush(cal, (trig, _ADMIT, seq, jb))
             else:
-                if small:
-                    have_ready = bool(jb.readyq)
-                    nxt = jb.gated[jb.gptr][0] \
-                        if jb.gptr < len(jb.gated) else None
-                else:
-                    have_ready = jb.n_ready > 0
-                    nxt = float(jb.g_rd[jb.gptr]) \
-                        if jb.gptr < jb.g_rd.shape[0] else None
+                have_ready = bool(jb.readyq)
+                nxt = jb.gated[jb.gptr][0] \
+                    if jb.gptr < len(jb.gated) else None
                 if have_ready:
                     seq += 1
                     heappush(cal, (jb.free, _ADMIT, seq, jb))
@@ -508,252 +776,24 @@ class NetworkEngine:
         # set.  Draining earlier than the next service event is sound: any
         # scalar drain happens at a service time t' >= t and moves a
         # superset, and pops always consider the whole admissible set.
-        if small:
-            def _drain(jb: _Job, t: float) -> None:
-                g = jb.gated
-                gp = jb.gptr
-                ng = len(g)
-                if gp >= ng or g[gp][0] > t:
-                    return
-                j = gp + 1
-                while j < ng and g[j][0] <= t:
-                    j += 1
-                rq = jb.readyq
-                if j - gp >= _DRAIN_BATCH_MIN:
-                    # bulk heappush: one heapify over the merged contents
-                    rq.extend((pr, op, i) for _r, pr, op, i in g[gp:j])
-                    heapify(rq)
-                else:
-                    for _r, pr, op, i in g[gp:j]:
-                        heappush(rq, (pr, op, i))
-                jb.gptr = j
-        else:
-            def _drain(jb: _Job, t: float) -> None:
-                gp = jb.gptr
-                grd = jb.g_rd
-                if gp >= grd.shape[0] or grd[gp] > t:
-                    return
-                j = int(grd.searchsorted(t, side="right"))
-                jb.readyq[jb.gated[gp:j]] = True   # one sliced scatter
-                jb.n_ready += j - gp
-                jb.gptr = j
-
-        # -- bulk commit: vectorized saturated stretch on link ``L`` --------
-        def _try_bulk(L: _Link, t0: float) -> int:
-            """While every completion instantly re-admits (constant
-            membership, constant share), each job's future completion marks
-            are prefix sums of its works — a pointer-mode job's marks walk
-            ``order[ptr:]``, a heap-mode job's walk its *resolved prefix*
-            (the admissible mask in (priority, op_id) order, valid until
-            the next gated ready time).  The per-job chains merge into one
-            (mark, flow)-sorted sequence whose completion times are a
-            single chained left fold — the exact float operations the
-            scalar spin performs, so bulk commits are bit-identical to
-            scalar processing.  Every completion strictly before the first
-            boundary (ready gate, gating boundary, hold flow, chain cap,
-            or foreign calendar event) commits in one vectorized pass.
-            Returns the number of flows committed."""
-            nonlocal n_done, g_wk, g_hd, g_lt, stale
-            S0 = L.S
-            share = L.share
-            # drop lazily-invalidated projections so a stale early entry
-            # cannot mask how far the bulk window really extends
-            while cal and cal[0][1] == _DONE and cal[0][3] != cal[0][4].version:
-                heappop(cal)
-            t_cal = cal[0][0] if cal else _INF
-            # O(1) pre-checks on the earliest completion: if its own job
-            # cannot instantly re-admit, the very first completion is a
-            # boundary and nothing can commit
-            m_top, i_top = L.heap[0]
-            t_first = t0 + (m_top - S0) / share
-            if t_cal <= t_first:
-                return 0
-            jb_top = job_of[i_top]
-            if hd_col[i_top]:
-                return 0
-            if jb_top.gated is None:
-                p = jb_top.ptr
-                if p >= len(jb_top.order) or jb_top.rdy[p] > t_first:
-                    return 0
+        def _drain(jb: _Job, t: float) -> None:
+            g = jb.gated
+            gp = jb.gptr
+            ng = len(g)
+            if gp >= ng or g[gp][0] > t:
+                return
+            j = gp + 1
+            while j < ng and g[j][0] <= t:
+                j += 1
+            rq = jb.readyq
+            if j - gp >= _DRAIN_BATCH_MIN:
+                # bulk heappush: one heapify over the merged contents
+                rq.extend((pr, op, i) for _r, pr, op, i in g[gp:j])
+                heapify(rq)
             else:
-                _drain(jb_top, t0)
-                if not jb_top.n_ready:
-                    return 0
-            # every heap-mode job's gating boundary caps the whole window
-            # (commits stop at the earliest gate), so if any gate precedes
-            # the first completion the call cannot commit — an O(jobs)
-            # rejection that keeps gate-dense phases (jittered plans) cheap
-            for _m_x, i_x in L.heap:
-                jx = job_of[i_x]
-                if jx.gated is not None:
-                    _drain(jx, t0)
-                    if (jx.gptr < jx.g_rd.shape[0]
-                            and jx.g_rd[jx.gptr] <= t_first):
-                        L.bulk_skip = 4     # locally gate-dense: go scalar
-                        return 0
-            if g_wk is None:
-                g_wk = np.asarray(wk_col)
-                g_hd = np.asarray(hd_col, dtype=bool)
-                g_lt = np.asarray(lt_col)
-            # no mark beyond this can commit (commit times are < t_cal), so
-            # chains truncate here before the merge sort — a truncation is
-            # just an earlier artificial boundary, never an arithmetic
-            # change, and the next call continues the same cumsum exactly
-            mark_limit = S0 + (t_cal - t0) * share
-            chains = []
-            mark_segs = []
-            id_segs = []
-            for m0, i0 in L.heap:
-                jb = job_of[i0]
-                if jb.link is not L:
-                    return 0
-                if jb.wk is None:
-                    onp = jb.onp = np.asarray(jb.order, dtype=np.intp)
-                    jb.wk = g_wk[onp]
-                    jb.rd = rd_np[onp]
-                    jb.hd = g_hd[onp]
-                    jb.lt = g_lt[onp]
-                kcap = L.bulk_cap
-                if jb.gated is None:
-                    ptr = jb.ptr
-                    k = len(jb.order) - ptr
-                    if k > kcap:
-                        k = kcap
-                    ids = np.empty(k + 1, dtype=np.intp)
-                    ids[0] = i0
-                    ids[1:] = jb.onp[ptr:ptr + k]
-                    marks = np.empty(k + 1)
-                    marks[0] = m0
-                    marks[1:] = jb.wk[ptr:ptr + k]
-                    pos = None
-                else:
-                    # resolved prefix: the admissible mask in service order
-                    # (this job was already drained by the gate pre-check)
-                    pos = jb.readyq.nonzero()[0]
-                    k = pos.shape[0]
-                    if k > kcap:
-                        k = kcap
-                        pos = pos[:k]
-                    ids = np.empty(k + 1, dtype=np.intp)
-                    ids[0] = i0
-                    ids[1:] = jb.onp[pos]
-                    marks = np.empty(k + 1)
-                    marks[0] = m0
-                    marks[1:] = jb.wk[pos]
-                marks = marks.cumsum()          # exact left fold, like scalar
-                if marks.shape[0] > 8:
-                    kk = int(marks.searchsorted(mark_limit,
-                                                side="right")) + 2
-                    if kk < marks.shape[0]:
-                        marks = marks[:kk]
-                        ids = ids[:kk]
-                        if pos is not None:
-                            pos = pos[:kk - 1]
-                chains.append((jb, m0, i0, marks, ids, pos))
-                mark_segs.append(marks)
-                id_segs.append(ids)
-            # merge all chains into global service order (ties break on the
-            # flow index, exactly like the link heap's (mark, i) tuples),
-            # then chain completion times with the scalar spin's own
-            # arithmetic: t_{j} = t_{j-1} + (m_j - m_{j-1}) / share
-            M = np.concatenate(mark_segs)
-            I = np.concatenate(id_segs)
-            order_g = np.lexsort((I, M))
-            Ms = M[order_g]
-            d = np.empty_like(Ms)
-            d[0] = t_first
-            if Ms.shape[0] > 1:
-                d[1:] = (Ms[1:] - Ms[:-1]) / share
-            times_sorted = d.cumsum()
-            times_flat = np.empty_like(times_sorted)
-            times_flat[order_g] = times_sorted
-            t_stop = t_cal
-            metas = []
-            off = 0
-            for jb, m0, i0, marks, ids, pos in chains:
-                n_j = marks.shape[0]
-                times = times_flat[off:off + n_j]
-                off += n_j
-                k = n_j - 1                     # future flows in the chain
-                if jb.gated is None:
-                    ptr = jb.ptr
-                    if k:
-                        viol = ((jb.rd[ptr:ptr + k] > times[:k])
-                                | jb.hd[ptr - 1:ptr + k - 1])
-                        nz = viol.nonzero()[0]
-                        v = int(nz[0]) + 1 if nz.size else k + 1
-                    else:
-                        v = 1
-                    bt = times[v - 1]           # this job's boundary time
-                else:
-                    if k:
-                        hd_prev = g_hd[ids[:k]]
-                        nz = hd_prev.nonzero()[0]
-                        v = int(nz[0]) + 1 if nz.size else k + 1
-                        bt = times[v - 1]
-                        # gating boundary: a commit window reaching the
-                        # next gated ready time would let a fresh flow
-                        # preempt the resolved prefix
-                        gp = jb.gptr
-                        if gp < jb.g_rd.shape[0]:
-                            tg = jb.g_rd[gp]
-                            if tg < bt:
-                                bt = tg
-                    else:
-                        v = 1
-                        bt = times[0]
-                if bt < t_stop:
-                    t_stop = bt
-                metas.append((jb, m0, i0, marks, times, v, ids, pos))
-            total = 0
-            entries = []
-            for jb, m0, i0, marks, times, v, ids, pos in metas:
-                c = int(times[:v].searchsorted(t_stop, side="left"))
-                if c == 0:
-                    entries.append((m0, i0))
-                    continue
-                tc = times[:c]
-                idc = ids[:c]
-                if c > 1:
-                    start[ids[1:c]] = tc[:-1]
-                wire[idc] = tc
-                if jb.gated is None:
-                    ptr = jb.ptr
-                    end[idc] = tc + jb.lt[ptr - 1:ptr + c - 1]
-                    ia = jb.order[ptr + c - 1]  # the job's new active flow
-                    jb.ptr = ptr + c
-                else:
-                    end[idc] = tc + g_lt[idc]
-                    ia = int(ids[c])
-                    # consume the committed prefix plus the new active flow
-                    jb.readyq[pos[:c]] = False
-                    jb.n_ready -= c
-                contended[idc] = True
-                tl = float(tc[-1])
-                start[ia] = tl
-                contended[ia] = True
-                entries.append((float(marks[c]), ia))
-                total += c
-            if not total:
-                return 0
-            L.heap = entries
-            heapify(entries)
-            # final link state = exactly the scalar spin's after serving
-            # the last committed completion of the merged sequence
-            n_commit = int(times_sorted.searchsorted(t_stop, side="left"))
-            L.S = float(Ms[n_commit - 1])
-            L.t_last = float(times_sorted[n_commit - 1])
-            L.version += 1
-            # geometric cap adaptation: big commits earn longer chains next
-            # call, near-empty windows shrink the per-call numpy work
-            nc = 2 * total
-            L.bulk_cap = (_BULK_CHAIN_CAP if nc > _BULK_CHAIN_CAP
-                          else nc if nc > 32 else 32)
-            if total < 4 * L.n:
-                L.bulk_skip = 64    # window too small to pay numpy setup
-            n_done += total
-            stale = 0               # bulk-committed work is progress
-            return total
+                for _r, pr, op, i in g[gp:j]:
+                    heappush(rq, (pr, op, i))
+            jb.gptr = j
 
         while n_done < n_total:
             if not cal:
@@ -822,19 +862,11 @@ class NetworkEngine:
                             if p < len(jb.order) and jb.rdy[p] <= t:
                                 jb.ptr = p + 1
                                 readmitted = _admit(jb.order[p], jb, t)
-                        elif small:
+                        else:
                             _drain(jb, t)
                             if jb.readyq:
                                 k = heappop(jb.readyq)[2]
                                 readmitted = _admit(k, jb, t)
-                        else:
-                            _drain(jb, t)
-                            if jb.n_ready:
-                                # first set bit = best (priority, op_id)
-                                p = int(jb.readyq.argmax())
-                                jb.readyq[p] = False
-                                jb.n_ready -= 1
-                                readmitted = _admit(jb.order[p], jb, t)
                     if readmitted is None:
                         _schedule_admit(jb, t)
                     elif readmitted is not L:
@@ -846,13 +878,6 @@ class NetworkEngine:
                                        seq, readmitted.version, readmitted))
                     if not L.n:
                         break
-                    if not small and L.n >= _BULK_MIN_ACTIVE:
-                        if L.bulk_skip:
-                            L.bulk_skip -= 1
-                        elif _try_bulk(L, t):
-                            t = L.t_last
-                            if not L.n:
-                                break
                     proj = t + (L.heap[0][0] - L.S) / L.share
                     if proj < t:
                         proj = t
@@ -886,21 +911,12 @@ class NetworkEngine:
                         admitted = _admit(jb.order[p], jb, t)
                     else:
                         _schedule_admit(jb, t)
-            elif small:
+            else:
                 _drain(jb, t)
                 if jb.readyq:
                     k = heappop(jb.readyq)[2]
                     admitted = _admit(k, jb, t)
                 elif jb.gptr < len(jb.gated):
-                    _schedule_admit(jb, t)
-            else:
-                _drain(jb, t)
-                if jb.n_ready:
-                    p = int(jb.readyq.argmax())
-                    jb.readyq[p] = False
-                    jb.n_ready -= 1
-                    admitted = _admit(jb.order[p], jb, t)
-                elif jb.gptr < jb.g_rd.shape[0]:
                     _schedule_admit(jb, t)
             if admitted is not None:
                 seq += 1
@@ -909,13 +925,125 @@ class NetworkEngine:
                 heappush(cal, (proj if proj > t else t, _DONE, seq,
                                admitted.version, admitted))
 
-        if small:
-            rows = zip(op_col, job_col, start, wire, end, contended)
-        else:
-            rows = zip(op_col, job_col, start.tolist(), wire.tolist(),
-                       end.tolist(), contended.tolist())
+        rows = zip(op_col, job_col, start, wire, end, contended)
         new = tuple.__new__
         return [new(FlowResult, row) for row in rows]
+
+    def run_batch(self, batch: FlowBatch) -> ResultBatch:
+        """Execute a columnar batch; results align with the batch's order.
+
+        The large-plan setup is fully vectorized: one global
+        ``lexsort((op_id, priority, job))`` yields every job's
+        (priority, op_id) service order *and* groups jobs in
+        first-appearance order (the job-code invariant), so per-job state
+        is built from contiguous slices — no tuple materialization and no
+        per-job sorts.  Below :data:`_SMALL_PLAN_MAX_FLOWS` the batch
+        bounces to the plain-list path (columnar setup must never engage
+        on paper-size plans); either way results are bit-identical to
+        ``run(batch.to_flows())``.
+        """
+        n_total = batch.n
+        if not n_total:
+            z = np.zeros(0)
+            return ResultBatch(batch.op_id, batch.jobs, batch.job,
+                               z, np.zeros(0), np.zeros(0),
+                               np.zeros(0, dtype=bool))
+        if n_total < _SMALL_PLAN_MAX_FLOWS:
+            res = self._run_small(batch.to_flows())
+            return ResultBatch(
+                batch.op_id, batch.jobs, batch.job,
+                np.array([r.start for r in res]),
+                np.array([r.wire_end for r in res]),
+                np.array([r.end for r in res]),
+                np.array([r.contended for r in res], dtype=bool))
+
+        caps = self.capacities
+        names = batch.links
+        li_col = batch.link
+        rail_counts = self.rails
+        li_dense = None             # dense per-flow link index, when needed
+        if rail_counts and any(rail_counts.get(nm, 1) > 1 for nm in names):
+            rail_objs: List[_Link] = []
+            base = np.empty(len(names), dtype=np.intp)
+            nr = np.empty(len(names), dtype=np.intp)
+            for k, nm in enumerate(names):
+                r = max(rail_counts.get(nm, 1), 1)
+                base[k] = len(rail_objs)
+                nr[k] = r
+                cap = caps.get(nm, 1.0)
+                rail_objs.extend(_Link(cap) for _ in range(r))
+            li_dense = base[li_col] + batch.rail % nr[li_col]
+            link_of = np.asarray(rail_objs, dtype=object)[li_dense].tolist()
+            one_link = len(rail_objs) == 1
+        elif len(names) == 1:
+            link_of = [_Link(caps.get(names[0], 1.0))] * n_total
+            one_link = True
+        else:
+            rail_objs = [_Link(caps.get(nm, 1.0)) for nm in names]
+            li_dense = li_col
+            link_of = np.asarray(rail_objs, dtype=object)[li_col].tolist()
+            one_link = len(rail_objs) == 1
+
+        rd_np = batch.ready
+        jcode = batch.job
+        n_jobs = len(batch.jobs)
+        if n_jobs > 1:
+            # stable 3-key sort == per-job (priority, op_id) lexsorts, with
+            # segments in job-code (= first-appearance) order
+            order_g = np.lexsort((batch.op_id, batch.priority, jcode))
+            jc_sorted = jcode[order_g]
+            cuts = np.flatnonzero(jc_sorted[1:] != jc_sorted[:-1]) + 1
+            bounds = np.concatenate((
+                np.zeros(1, dtype=np.intp), cuts,
+                np.full(1, n_total, dtype=np.intp)))
+        else:
+            order_g = np.lexsort((batch.op_id, batch.priority))
+            bounds = np.array([0, n_total], dtype=np.intp)
+
+        wk_col = batch.work.tolist()
+        lt_col = batch.latency.tolist()
+        hd_col = batch.hold.tolist()
+        du_col = batch.duration.tolist()
+
+        cal: List = []
+        seq = 0
+        job_list: List[_Job] = []
+        for s_, e_ in zip(bounds[:-1].tolist(), bounds[1:].tolist()):
+            ix = order_g[s_:e_]
+            jb = _Job()
+            jb.onp = ix
+            order = jb.order = ix.tolist()
+            rd_ix = rd_np[ix]
+            rdy = jb.rdy = rd_ix.tolist()
+            monotone = (len(rdy) == 1
+                        or bool((rd_ix[1:] >= rd_ix[:-1]).all()))
+            if one_link:
+                jb.link = link_of[order[0]]
+            else:
+                li_ix = li_dense[ix]
+                jb.link = (link_of[order[0]]
+                           if bool((li_ix == li_ix[0]).all()) else None)
+            if monotone:
+                trigger = rdy[0]
+            else:
+                g_pos = np.argsort(rd_ix, kind="stable")
+                jb.gated = g_pos
+                jb.g_rd = rd_ix[g_pos]
+                jb.readyq = np.zeros(len(order), dtype=bool)
+                trigger = float(jb.g_rd[0])
+            seq += 1
+            cal.append((trigger if trigger > 0.0 else 0.0, _ADMIT, seq, jb))
+            job_list.append(jb)
+        if n_jobs > 1:
+            job_of = np.asarray(job_list, dtype=object)[jcode].tolist()
+        else:
+            job_of = [job_list[0]] * n_total
+
+        start, wire, end, contended = _run_core(
+            n_total, wk_col, lt_col, hd_col, du_col, rd_np, link_of,
+            job_of, cal, seq, batch.work, batch.hold, batch.latency)
+        return ResultBatch(batch.op_id, batch.jobs, batch.job,
+                           start, wire, end, contended)
 
 
 def run_flows(flows: Sequence[FlowSpec],
@@ -927,3 +1055,516 @@ def run_flows(flows: Sequence[FlowSpec],
     :class:`NetworkEngine`.
     """
     return NetworkEngine(capacities, rails).run(flows)
+
+
+def run_flow_batch(batch: FlowBatch,
+                   capacities: Optional[Dict[str, float]] = None,
+                   rails: Optional[Dict[str, int]] = None) -> ResultBatch:
+    """Columnar :func:`run_flows`: execute a batch on a fresh engine."""
+    return NetworkEngine(capacities, rails).run_batch(batch)
+
+
+def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
+              link_of, job_of, cal, seq, g_wk, g_hd, g_lt):
+    """The large-plan event loop over columnar state.
+
+    ``wk_col``/``lt_col``/``hd_col``/``du_col`` are plain python lists
+    (scalar indexing in the hot loop), ``g_wk``/``g_hd``/``g_lt``/``rd_np``
+    the matching numpy columns (the bulk path's gathers); ``du_col`` holds
+    NaN where a duration is absent.  ``cal`` arrives as an unheapified
+    list of per-job admission triggers in job first-appearance order.
+    Returns ``(start, wire, end, contended)`` numpy arrays.
+    """
+    heapify(cal)                # one pass beats n pushes at setup
+    start = np.zeros(n_total)
+    wire = np.zeros(n_total)
+    end = np.zeros(n_total)
+    contended = np.zeros(n_total, dtype=bool)
+    n_done = 0
+    stale = 0                   # consecutive no-progress calendar pops
+    stall_limit = _STALL_FACTOR * n_total + _STALL_BASE
+    sweep_at = 256              # calendar size that triggers a compaction
+
+    # -- admission: put flow ``i`` on its link at time ``t`` ----------------
+    def _admit(i: int, jb: _Job, t: float) -> _Link:
+        nonlocal stale
+        stale = 0               # an admission is committed work
+        L = link_of[i]
+        if L.n:
+            if t > L.t_last:
+                L.S += (t - L.t_last) * L.share
+            L.t_last = t
+            contended[i] = True
+            if not L.all_contended:
+                for _, k in L.heap:
+                    contended[k] = True
+                L.all_contended = True
+        else:
+            # fresh busy period: restart the service clock so the
+            # single-flow closed form stays exact (mark == work)
+            L.S = 0.0
+            L.t_last = t
+            if L.cap < 1.0:
+                contended[i] = True
+                L.all_contended = True
+        heappush(L.heap, (L.S + wk_col[i], i))
+        L.n += 1
+        c = L.cap
+        L.share = 1.0 if c >= L.n else c / L.n
+        L.version += 1
+        start[i] = t
+        jb.busy = True
+        return L
+
+    # -- next-admission trigger for a job that just freed -------------------
+    def _schedule_admit(jb: _Job, t: float) -> None:
+        nonlocal seq
+        if jb.gated is None:
+            if jb.ptr < len(jb.order):
+                trig = jb.rdy[jb.ptr]
+                if trig < jb.free:
+                    trig = jb.free
+                seq += 1
+                heappush(cal, (trig, _ADMIT, seq, jb))
+        else:
+            have_ready = jb.n_ready > 0
+            nxt = float(jb.g_rd[jb.gptr]) \
+                if jb.gptr < jb.g_rd.shape[0] else None
+            if have_ready:
+                seq += 1
+                heappush(cal, (jb.free, _ADMIT, seq, jb))
+            elif nxt is not None:
+                trig = nxt if nxt > jb.free else jb.free
+                seq += 1
+                heappush(cal, (trig, _ADMIT, seq, jb))
+
+    # -- heap mode: move gated flows with ready <= t to the admissible
+    # set.  Draining earlier than the next service event is sound: any
+    # scalar drain happens at a service time t' >= t and moves a
+    # superset, and pops always consider the whole admissible set.
+    def _drain(jb: _Job, t: float) -> None:
+        gp = jb.gptr
+        grd = jb.g_rd
+        if gp >= grd.shape[0] or grd[gp] > t:
+            return
+        j = int(grd.searchsorted(t, side="right"))
+        jb.readyq[jb.gated[gp:j]] = True   # one sliced scatter
+        jb.n_ready += j - gp
+        jb.gptr = j
+
+    # -- bulk commit: vectorized saturated stretch on link ``L`` ------------
+    def _try_bulk(L: _Link, t0: float, t_cal: float,
+                  t_first: Optional[float] = None) -> int:
+        """While every completion instantly re-admits (constant
+        membership, constant share), each job's future completion marks
+        are prefix sums of its works — a pointer-mode job's marks walk
+        ``order[ptr:]``, a heap-mode job's walk its *resolved prefix*
+        (the admissible mask in (priority, op_id) order, valid until
+        the next gated ready time).  The per-job chains merge into one
+        (mark, flow)-sorted sequence whose completion times are a
+        single chained left fold — the exact float operations the
+        scalar spin performs, so bulk commits are bit-identical to
+        scalar processing.  Every completion strictly before the first
+        boundary (ready gate, gating boundary, hold flow, chain cap,
+        or the ``t_cal`` calendar fence) commits in one vectorized pass.
+        ``t_first`` overrides the first completion time — a *parked*
+        link's calendar entry carries the exact (possibly clamped) time
+        the scalar loop would have served it at.  Returns the number of
+        flows committed."""
+        nonlocal n_done, stale
+        S0 = L.S
+        share = L.share
+        # O(1) pre-checks on the earliest completion: if its own job
+        # cannot instantly re-admit, the very first completion is a
+        # boundary and nothing can commit
+        m_top, i_top = L.heap[0]
+        if t_first is None:
+            t_first = t0 + (m_top - S0) / share
+        if t_cal <= t_first:
+            return 0
+        jb_top = job_of[i_top]
+        if hd_col[i_top]:
+            return 0
+        if jb_top.gated is None:
+            p = jb_top.ptr
+            if p >= len(jb_top.order) or jb_top.rdy[p] > t_first:
+                return 0
+        else:
+            _drain(jb_top, t0)
+            if not jb_top.n_ready:
+                return 0
+        # every heap-mode job's gating boundary caps the whole window
+        # (commits stop at the earliest gate), so if any gate precedes
+        # the first completion the call cannot commit — an O(jobs)
+        # rejection that keeps gate-dense phases (jittered plans) cheap
+        for _m_x, i_x in L.heap:
+            jx = job_of[i_x]
+            if jx.gated is not None:
+                _drain(jx, t0)
+                if (jx.gptr < jx.g_rd.shape[0]
+                        and jx.g_rd[jx.gptr] <= t_first):
+                    L.bulk_skip = 4     # locally gate-dense: go scalar
+                    return 0
+        # no mark beyond this can commit (commit times are < t_cal), so
+        # chains truncate here before the merge sort — a truncation is
+        # just an earlier artificial boundary, never an arithmetic
+        # change, and the next call continues the same cumsum exactly
+        mark_limit = S0 + (t_cal - t0) * share
+        chains = []
+        mark_segs = []
+        id_segs = []
+        for m0, i0 in L.heap:
+            jb = job_of[i0]
+            if jb.link is not L:
+                return 0
+            if jb.wk is None:
+                onp = jb.onp
+                if onp is None:
+                    onp = jb.onp = np.asarray(jb.order, dtype=np.intp)
+                jb.wk = g_wk[onp]
+                jb.rd = rd_np[onp]
+                jb.hd = g_hd[onp]
+                jb.lt = g_lt[onp]
+            kcap = L.bulk_cap
+            if jb.gated is None:
+                ptr = jb.ptr
+                k = len(jb.order) - ptr
+                if k > kcap:
+                    k = kcap
+                ids = np.empty(k + 1, dtype=np.intp)
+                ids[0] = i0
+                ids[1:] = jb.onp[ptr:ptr + k]
+                marks = np.empty(k + 1)
+                marks[0] = m0
+                marks[1:] = jb.wk[ptr:ptr + k]
+                pos = None
+            else:
+                # resolved prefix: the admissible mask in service order
+                # (this job was already drained by the gate pre-check)
+                pos = jb.readyq.nonzero()[0]
+                k = pos.shape[0]
+                if k > kcap:
+                    k = kcap
+                    pos = pos[:k]
+                ids = np.empty(k + 1, dtype=np.intp)
+                ids[0] = i0
+                ids[1:] = jb.onp[pos]
+                marks = np.empty(k + 1)
+                marks[0] = m0
+                marks[1:] = jb.wk[pos]
+            marks = marks.cumsum()          # exact left fold, like scalar
+            if marks.shape[0] > 8:
+                kk = int(marks.searchsorted(mark_limit,
+                                            side="right")) + 2
+                if kk < marks.shape[0]:
+                    marks = marks[:kk]
+                    ids = ids[:kk]
+                    if pos is not None:
+                        pos = pos[:kk - 1]
+            chains.append((jb, m0, i0, marks, ids, pos))
+            mark_segs.append(marks)
+            id_segs.append(ids)
+        # merge all chains into global service order (ties break on the
+        # flow index, exactly like the link heap's (mark, i) tuples),
+        # then chain completion times with the scalar spin's own
+        # arithmetic: t_{j} = t_{j-1} + (m_j - m_{j-1}) / share
+        M = np.concatenate(mark_segs)
+        I = np.concatenate(id_segs)
+        order_g = np.lexsort((I, M))
+        Ms = M[order_g]
+        d = np.empty_like(Ms)
+        d[0] = t_first
+        if Ms.shape[0] > 1:
+            d[1:] = (Ms[1:] - Ms[:-1]) / share
+        times_sorted = d.cumsum()
+        times_flat = np.empty_like(times_sorted)
+        times_flat[order_g] = times_sorted
+        t_stop = t_cal
+        metas = []
+        off = 0
+        for jb, m0, i0, marks, ids, pos in chains:
+            n_j = marks.shape[0]
+            times = times_flat[off:off + n_j]
+            off += n_j
+            k = n_j - 1                     # future flows in the chain
+            if jb.gated is None:
+                ptr = jb.ptr
+                if k:
+                    viol = ((jb.rd[ptr:ptr + k] > times[:k])
+                            | jb.hd[ptr - 1:ptr + k - 1])
+                    nz = viol.nonzero()[0]
+                    v = int(nz[0]) + 1 if nz.size else k + 1
+                else:
+                    v = 1
+                bt = times[v - 1]           # this job's boundary time
+            else:
+                if k:
+                    hd_prev = g_hd[ids[:k]]
+                    nz = hd_prev.nonzero()[0]
+                    v = int(nz[0]) + 1 if nz.size else k + 1
+                    bt = times[v - 1]
+                    # gating boundary: a commit window reaching the
+                    # next gated ready time would let a fresh flow
+                    # preempt the resolved prefix
+                    gp = jb.gptr
+                    if gp < jb.g_rd.shape[0]:
+                        tg = jb.g_rd[gp]
+                        if tg < bt:
+                            bt = tg
+                else:
+                    v = 1
+                    bt = times[0]
+            if bt < t_stop:
+                t_stop = bt
+            metas.append((jb, m0, i0, marks, times, v, ids, pos))
+        total = 0
+        entries = []
+        for jb, m0, i0, marks, times, v, ids, pos in metas:
+            c = int(times[:v].searchsorted(t_stop, side="left"))
+            if c == 0:
+                entries.append((m0, i0))
+                continue
+            tc = times[:c]
+            idc = ids[:c]
+            if c > 1:
+                start[ids[1:c]] = tc[:-1]
+            wire[idc] = tc
+            if jb.gated is None:
+                ptr = jb.ptr
+                end[idc] = tc + jb.lt[ptr - 1:ptr + c - 1]
+                ia = jb.order[ptr + c - 1]  # the job's new active flow
+                jb.ptr = ptr + c
+            else:
+                end[idc] = tc + g_lt[idc]
+                ia = int(ids[c])
+                # consume the committed prefix plus the new active flow
+                jb.readyq[pos[:c]] = False
+                jb.n_ready -= c
+            contended[idc] = True
+            tl = float(tc[-1])
+            start[ia] = tl
+            contended[ia] = True
+            entries.append((float(marks[c]), ia))
+            total += c
+        if not total:
+            return 0
+        L.heap = entries
+        heapify(entries)
+        # final link state = exactly the scalar spin's after serving
+        # the last committed completion of the merged sequence
+        n_commit = int(times_sorted.searchsorted(t_stop, side="left"))
+        L.S = float(Ms[n_commit - 1])
+        L.t_last = float(times_sorted[n_commit - 1])
+        L.version += 1
+        # geometric cap adaptation: big commits earn longer chains next
+        # call, near-empty windows shrink the per-call numpy work
+        nc = 2 * total
+        L.bulk_cap = (_BULK_CHAIN_CAP if nc > _BULK_CHAIN_CAP
+                      else nc if nc > 32 else 32)
+        if total < 4 * L.n:
+            L.bulk_skip = 64    # window too small to pay numpy setup
+        n_done += total
+        stale = 0               # bulk-committed work is progress
+        return total
+
+    # -- multi-link bulk window: retire saturated stretches across all
+    # eligible links per window, not one ``_try_bulk(L, t)`` at a time ------
+    def _bulk_window(L: _Link, t0: float) -> int:
+        """Park other links' valid projected completions at the front of
+        the calendar when those links are themselves bulk-eligible and
+        *self-contained* (every job in their heap runs entirely on them,
+        so nothing they commit can admit work on another link — any
+        cross-link effect would arrive as a calendar event, which then
+        fences the window).  The shared fence ``t_cal`` is the first
+        non-parkable event; ``L`` and every parked link each retire their
+        stretch against it.  A parked link's first completion is served at
+        the exact time its calendar entry carried (the scalar loop's
+        arithmetic, clamping included); an entry whose link commits
+        nothing is re-pushed *unchanged* — same seq, same tie order."""
+        nonlocal seq
+        parked = []
+        while cal:
+            ev = cal[0]
+            if ev[1] != _DONE:
+                break
+            L2 = ev[4]
+            if ev[3] != L2.version:
+                heappop(cal)        # lazily-invalidated projection
+                continue
+            if L2 is L or L2.n < _BULK_MIN_ACTIVE or L2.bulk_skip:
+                break
+            contained = True
+            for _m, i in L2.heap:
+                if job_of[i].link is not L2:
+                    contained = False
+                    break
+            if not contained:
+                break
+            heappop(cal)
+            parked.append(ev)
+        t_cal = cal[0][0] if cal else _INF
+        total = _try_bulk(L, t0, t_cal)
+        for ev in parked:
+            L2 = ev[4]
+            if ev[3] != L2.version:
+                continue            # defensive; parked links are disjoint
+            if _try_bulk(L2, L2.t_last, t_cal, ev[0]):
+                # bulk preserves membership (every completion re-admits),
+                # so L2 still has a next completion to project
+                seq += 1
+                proj2 = L2.t_last + (L2.heap[0][0] - L2.S) / L2.share
+                if proj2 < L2.t_last:
+                    proj2 = L2.t_last
+                heappush(cal, (proj2, _DONE, seq, L2.version, L2))
+            else:
+                heappush(cal, ev)
+        return total
+
+    while n_done < n_total:
+        if not cal:
+            raise RuntimeError(
+                f"event engine stalled: {n_done}/{n_total} flows done "
+                "with an empty calendar")
+        ev = heappop(cal)
+        t = ev[0]
+
+        if ev[1] == _DONE:
+            ver, L = ev[3], ev[4]
+            if ver != L.version or not L.n:
+                stale += 1      # lazily-invalidated projection
+                if stale > stall_limit:
+                    raise RuntimeError(
+                        "event engine made no progress over "
+                        f"{stale} events ({n_done}/{n_total} flows done)")
+                if len(cal) > sweep_at:
+                    # batched stale sweep: one filter pass + heapify
+                    # beats popping invalidated projections one by one
+                    cal[:] = [e for e in cal if e[1] == _ADMIT
+                              or e[3] == e[4].version]
+                    heapify(cal)
+                    sweep_at = max(256, 2 * len(cal))
+                continue
+            stale = 0
+            # ---- completion spin: serve this link's completions while
+            # they precede everything else on the calendar ------------------
+            while True:
+                if t > L.t_last:
+                    L.S += (t - L.t_last) * L.share
+                L.t_last = t
+                s_top, i = heappop(L.heap)
+                L.S = s_top
+                L.n -= 1
+                L.version += 1
+                if L.n:
+                    c = L.cap
+                    L.share = 1.0 if c >= L.n else c / L.n
+                else:
+                    L.all_contended = False
+                if contended[i]:
+                    w = t
+                    e = t + lt_col[i]
+                else:
+                    # exact closed form: share was 1.0 throughout
+                    w = float(start[i]) + wk_col[i]
+                    d = du_col[i]
+                    if hd_col[i] and d == d:    # NaN = no duration
+                        e = float(start[i]) + d
+                    else:
+                        e = w + lt_col[i]
+                wire[i] = w
+                end[i] = e
+                n_done += 1
+                jb = job_of[i]
+                jb.busy = False
+                jb.free = e if hd_col[i] else w
+                # instant re-admission keeps the spin going (the
+                # saturated steady state); anything else goes back
+                # through the calendar
+                readmitted = None
+                if not hd_col[i]:
+                    if jb.gated is None:
+                        p = jb.ptr
+                        if p < len(jb.order) and jb.rdy[p] <= t:
+                            jb.ptr = p + 1
+                            readmitted = _admit(jb.order[p], jb, t)
+                    else:
+                        _drain(jb, t)
+                        if jb.n_ready:
+                            # first set bit = best (priority, op_id)
+                            p = int(jb.readyq.argmax())
+                            jb.readyq[p] = False
+                            jb.n_ready -= 1
+                            readmitted = _admit(jb.order[p], jb, t)
+                if readmitted is None:
+                    _schedule_admit(jb, t)
+                elif readmitted is not L:
+                    # cross-link re-admission: project the other link
+                    seq += 1
+                    s2 = readmitted.heap[0][0]
+                    proj2 = t + (s2 - readmitted.S) / readmitted.share
+                    heappush(cal, (proj2 if proj2 > t else t, _DONE,
+                                   seq, readmitted.version, readmitted))
+                if not L.n:
+                    break
+                if L.n >= _BULK_MIN_ACTIVE:
+                    if L.bulk_skip:
+                        L.bulk_skip -= 1
+                    elif _bulk_window(L, t):
+                        t = L.t_last
+                        if not L.n:
+                            break
+                proj = t + (L.heap[0][0] - L.S) / L.share
+                if proj < t:
+                    proj = t
+                if cal and cal[0][0] < proj:
+                    seq += 1
+                    heappush(cal, (proj, _DONE, seq, L.version, L))
+                    break
+                t = proj
+            continue
+
+        # ---- admission event ----------------------------------------------
+        jb = ev[3]
+        if jb.busy:
+            stale += 1          # superseded by an instant re-admission
+            if stale > stall_limit:
+                raise RuntimeError(
+                    "event engine made no progress over "
+                    f"{stale} events ({n_done}/{n_total} flows done)")
+            continue
+        if jb.free > t:         # defensive: fire again once free
+            stale += 1
+            _schedule_admit(jb, t)
+            continue
+        stale = 0               # a serviced admission trigger is progress
+        admitted = None
+        if jb.gated is None:
+            p = jb.ptr
+            if p < len(jb.order):
+                if jb.rdy[p] <= t:
+                    jb.ptr = p + 1
+                    admitted = _admit(jb.order[p], jb, t)
+                else:
+                    _schedule_admit(jb, t)
+        else:
+            _drain(jb, t)
+            if jb.n_ready:
+                p = int(jb.readyq.argmax())
+                jb.readyq[p] = False
+                jb.n_ready -= 1
+                admitted = _admit(jb.order[p], jb, t)
+            elif jb.gptr < jb.g_rd.shape[0]:
+                _schedule_admit(jb, t)
+        if admitted is not None:
+            seq += 1
+            s_top = admitted.heap[0][0]
+            proj = t + (s_top - admitted.S) / admitted.share
+            heappush(cal, (proj if proj > t else t, _DONE, seq,
+                           admitted.version, admitted))
+
+    return start, wire, end, contended
+
+
+
+
+

@@ -21,6 +21,8 @@ import math
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.core.addest import AddEst
 
 
@@ -36,6 +38,27 @@ def ring_reduction_time(size: int, n: int, addest: AddEst) -> float:
     if n <= 1:
         return 0.0
     return (n - 1) * addest(size / n)
+
+
+# Vectorized twins over a float64 size column.  Exactness contract (all the
+# ``*_v``/``time_v`` functions below): elementwise numpy float64 arithmetic
+# performs the scalar expressions' operations in the scalar expressions'
+# order, so ``f_v(sizes)[i]`` is bit-identical to ``f(sizes[i])`` — the
+# columnar lowering (:func:`repro.core.schedule.plan_to_flow_batch`)
+# produces the same float values as the per-op loop, not approximations.
+
+def ring_transmission_time_v(sizes: np.ndarray, n: int,
+                             bw: float) -> np.ndarray:
+    if n <= 1:
+        return np.zeros_like(sizes)
+    return (2.0 * sizes * (n - 1) / n) / bw
+
+
+def ring_reduction_time_v(sizes: np.ndarray, n: int,
+                          addest: AddEst) -> np.ndarray:
+    if n <= 1:
+        return np.zeros_like(sizes)
+    return (n - 1) * addest.batch(sizes / n)
 
 
 @dataclass(frozen=True)
@@ -60,6 +83,20 @@ class RingAllReduce:
     def wire_time(self, size: int) -> float:
         """Transmission share of :meth:`time` — scales under link sharing."""
         return ring_transmission_time(size, self.n, self.bw) / self.compression_ratio
+
+    def time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`time`, bit-identical per element."""
+        t = ring_transmission_time_v(sizes, self.n, self.bw) \
+            / self.compression_ratio
+        red = ring_reduction_time_v(sizes, self.n, self.addest)
+        if self.compress_reduction:
+            red = red / self.compression_ratio
+        return t + red
+
+    def wire_time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`wire_time`, bit-identical per element."""
+        return ring_transmission_time_v(sizes, self.n, self.bw) \
+            / self.compression_ratio
 
     def wire_bytes(self, size: int) -> float:
         """Bytes each worker actually moves on its NIC for one all-reduce."""
@@ -107,6 +144,33 @@ class HierarchicalAllReduce:
             t += (2.0 * shard * (np_ - 1) / np_ / self.dcn_bw) / self.compression_ratio
         return t
 
+    def time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`time`, bit-identical per element (the
+        accumulation adds the same stage terms in the same order)."""
+        nd, np_ = self.n_pod_devices, self.n_pods
+        t = np.zeros_like(sizes)
+        if nd > 1:
+            t = t + 2.0 * sizes * (nd - 1) / nd / self.ici_bw
+            t = t + (nd - 1) * self.addest.batch(sizes / nd)
+        if np_ > 1:
+            shard = sizes / max(nd, 1)
+            t = t + (2.0 * shard * (np_ - 1) / np_ / self.dcn_bw) \
+                / self.compression_ratio
+            t = t + (np_ - 1) * self.addest.batch(shard / np_)
+        return t
+
+    def wire_time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`wire_time`, bit-identical per element."""
+        nd, np_ = self.n_pod_devices, self.n_pods
+        t = np.zeros_like(sizes)
+        if nd > 1:
+            t = t + 2.0 * sizes * (nd - 1) / nd / self.ici_bw
+        if np_ > 1:
+            shard = sizes / max(nd, 1)
+            t = t + (2.0 * shard * (np_ - 1) / np_ / self.dcn_bw) \
+                / self.compression_ratio
+        return t
+
     def wire_bytes(self, size: int) -> float:
         """Bytes on the *ICI* link (the bandwidth under study); the DCN stage
         moves the 1/nd shard and is reported via :meth:`wire_bytes_dcn`."""
@@ -148,6 +212,15 @@ class SwitchMLAllReduce:
     def wire_time(self, size: int) -> float:
         return self.time(size)        # all wire, no worker-side adds
 
+    def time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`time`, bit-identical per element."""
+        if self.n <= 1:
+            return np.zeros_like(sizes)
+        return (sizes / self.bw) / self.compression_ratio
+
+    def wire_time_v(self, sizes: np.ndarray) -> np.ndarray:
+        return self.time_v(sizes)     # all wire, no worker-side adds
+
     def wire_bytes(self, size: int) -> float:
         """In-network aggregation streams ~S per worker (full duplex),
         independent of N — the point of SwitchML."""
@@ -183,6 +256,20 @@ class TwoTierParamServer:
         if self.n <= 1:
             return 0.0
         return (2.0 * size * (self.n - 1) / self.n / self.bw) / self.compression_ratio
+
+    def time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`time`, bit-identical per element."""
+        if self.n <= 1:
+            return np.zeros_like(sizes)
+        wire = (2.0 * sizes * (self.n - 1) / self.n / self.bw)
+        return wire / self.compression_ratio \
+            + self.addest.batch(sizes / self.n) * (self.n - 1)
+
+    def wire_time_v(self, sizes: np.ndarray) -> np.ndarray:
+        if self.n <= 1:
+            return np.zeros_like(sizes)
+        return (2.0 * sizes * (self.n - 1) / self.n / self.bw) \
+            / self.compression_ratio
 
     def wire_bytes(self, size: int) -> float:
         if self.n <= 1:

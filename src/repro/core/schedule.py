@@ -59,8 +59,11 @@ from dataclasses import dataclass, replace
 from typing import (Callable, Dict, List, Mapping, NamedTuple, Optional,
                     Sequence, Tuple)
 
+import numpy as np
+
 from repro.core.codec import SIZE_ADAPTIVE_THRESHOLD, Codec
-from repro.core.events import DEFAULT_JOB, FlowSpec
+from repro.core.events import (DEFAULT_JOB, FlowBatch, FlowSpec, _EMPTY_BATCH,
+                               _intern, serialized_chain)
 
 DEFAULT_CHUNKS = 4
 
@@ -453,6 +456,148 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
             link=link, hold=hold, duration=lat + rail_work,
             rail=op.channel))
     return flows
+
+
+def _time_col(cost, sizes: np.ndarray) -> np.ndarray:
+    """``cost.time`` over a size column — ``time_v`` when the model has one
+    (bit-identical per element by contract), scalar loop otherwise."""
+    tv = getattr(cost, "time_v", None)
+    if tv is not None:
+        return tv(sizes)
+    return np.array([cost.time(s) for s in sizes.tolist()], dtype=np.float64)
+
+
+def _wire_col(cost, sizes: np.ndarray) -> np.ndarray:
+    """``getattr(cost, "wire_time", cost.time)`` over a size column."""
+    wv = getattr(cost, "wire_time_v", None)
+    if wv is not None:
+        return wv(sizes)
+    wt = getattr(cost, "wire_time", None)
+    if wt is not None:
+        return np.array([wt(s) for s in sizes.tolist()], dtype=np.float64)
+    return _time_col(cost, sizes)
+
+
+def _channel_names(chans: np.ndarray, fmt) -> Tuple[Tuple[str, ...],
+                                                    np.ndarray]:
+    """Intern a channel column into (name table, codes) under a naming rule,
+    with the table in first-appearance order — the same order a per-op loop
+    building names would produce, which :class:`FlowBatch` requires."""
+    if not chans.any():
+        return (fmt(0),), np.zeros(len(chans), dtype=np.intp)
+    u, first, inv = np.unique(chans, return_index=True, return_inverse=True)
+    order = np.argsort(first, kind="stable")
+    rank = np.empty(len(u), dtype=np.intp)
+    rank[order] = np.arange(len(u), dtype=np.intp)
+    return tuple(fmt(int(c)) for c in u[order]), rank[inv]
+
+
+def plan_to_flow_batch(plan: CommPlan, cost,
+                       per_tensor_overhead: float = 0.0, *,
+                       job: str = "job0", link: str = "nic",
+                       op_id_base: int = 0, n_rails: int = 1,
+                       codecs: Optional[Mapping[str, CodecLowering]] = None
+                       ) -> FlowBatch:
+    """Columnar :func:`plan_to_flows`: one vectorized pass over the plan
+    producing a :class:`FlowBatch` instead of a FlowSpec list.
+
+    Bit-identity is the contract, not an aspiration: every column holds
+    exactly the float values the per-op loop would put in the tuples.  The
+    pieces that make that true:
+
+    - cost models expose ``time_v``/``wire_time_v`` twins whose elementwise
+      numpy arithmetic performs the scalar expressions' operations in the
+      same order (models without the twins fall back to a scalar loop);
+    - the codec encode chain — serialized on the job's GPU with a running
+      ``enc_clock`` — is the max-plus recurrence, solved exactly by
+      :func:`repro.core.events.serialized_chain` over the subsequence of
+      ops with nonzero encode cost (a ``np.maximum.accumulate`` cumsum
+      would re-associate the adds and drift);
+    - job/link name tables come out in first-appearance order, the
+      :class:`FlowBatch` invariant the engine's tie-breaking relies on.
+
+    ``plan_to_flows(...)`` and ``FlowBatch.from_flows`` round-trip through
+    this equivalence; the property suite pins it element-wise.
+    """
+    ops = plan.ops
+    if not ops:
+        return _EMPTY_BATCH
+    op_col, size_col, nt_col, rdy_col, pr_col, ch_col, chunk_col = zip(
+        *((o.op_id, o.size, o.n_tensors, o.ready, o.priority, o.channel,
+           o.chunk) for o in ops))
+    n = len(ops)
+    sizes = np.asarray(size_col, dtype=np.float64)
+    nt = np.asarray(nt_col, dtype=np.float64)
+    ready = np.asarray(rdy_col, dtype=np.float64)
+    pr = np.asarray(pr_col, dtype=np.float64)
+    chans = np.asarray(ch_col, dtype=np.intp)
+    op_ids = np.asarray(op_col, dtype=np.intp) + op_id_base
+    hold = np.full(n, plan.scheduler == "fifo")
+    pto = per_tensor_overhead
+
+    if codecs is not None:
+        ctab, ccode = _intern([o.codec for o in ops])
+        totals = np.empty(n)
+        wires = np.empty(n)
+        enc = np.zeros(n)
+        dec = np.zeros(n)
+        chunk0 = np.asarray(chunk_col, dtype=np.intp) == 0
+        for k, cname in enumerate(ctab):
+            cl = codecs[cname]
+            idx = np.flatnonzero(ccode == k)
+            s = sizes[idx]
+            tg = _time_col(cl.cost, s) + pto * nt[idx]
+            totals[idx] = tg
+            wires[idx] = np.minimum(_wire_col(cl.cost, s), tg)
+            cd = cl.codec
+            if not cd.is_free:
+                launch = np.where(chunk0[idx], cd.launch_overhead, 0.0)
+                enc[idx] = launch + cd.encode_seconds(s)
+                dec[idx] = launch + cd.decode_seconds(s)
+        m = enc > 0.0
+        if m.any():
+            # the encode chain runs across ALL ops in op order, skipping
+            # zero-cost ops — exactly the scalar loop's enc_clock updates
+            _, ends = serialized_chain(ready[m], enc[m])
+            ready = ready.copy()
+            ready[m] = ends
+        lat = np.maximum(0.0, totals - wires) + dec
+        if n_rails <= 1:
+            links, lcode = _channel_names(
+                chans, lambda c: f"{link}{c}" if c else link)
+            return FlowBatch(
+                op_id=op_ids, ready=ready, work=wires, latency=lat,
+                priority=pr, duration=totals + dec, hold=hold,
+                jobs=(job,), job=np.zeros(n, dtype=np.intp),
+                links=links, link=lcode, rail=np.zeros(n, dtype=np.intp))
+        rail_work = wires * n_rails
+        jobs, jcode = _channel_names(
+            chans, lambda c: job if c == 0 else f"{job}@r{c}")
+        return FlowBatch(
+            op_id=op_ids, ready=ready, work=rail_work, latency=lat,
+            priority=pr, duration=lat + rail_work, hold=hold,
+            jobs=jobs, job=jcode, links=(link,),
+            link=np.zeros(n, dtype=np.intp), rail=chans)
+
+    totals = _time_col(cost, sizes) + pto * nt
+    wires = np.minimum(_wire_col(cost, sizes), totals)
+    lat = np.maximum(0.0, totals - wires)
+    if n_rails <= 1:
+        links, lcode = _channel_names(
+            chans, lambda c: f"{link}{c}" if c else link)
+        return FlowBatch(
+            op_id=op_ids, ready=ready, work=wires, latency=lat,
+            priority=pr, duration=totals, hold=hold,
+            jobs=(job,), job=np.zeros(n, dtype=np.intp),
+            links=links, link=lcode, rail=np.zeros(n, dtype=np.intp))
+    rail_work = wires * n_rails                # per-rail bw = aggregate / n
+    jobs, jcode = _channel_names(
+        chans, lambda c: job if c == 0 else f"{job}@r{c}")
+    return FlowBatch(
+        op_id=op_ids, ready=ready, work=rail_work, latency=lat,
+        priority=pr, duration=lat + rail_work, hold=hold,
+        jobs=jobs, job=jcode, links=(link,),
+        link=np.zeros(n, dtype=np.intp), rail=chans)
 
 
 def clone_flows(flows: Sequence[FlowSpec], op_id_base: int, job: str, *,

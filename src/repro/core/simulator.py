@@ -48,13 +48,17 @@ import numpy as np
 from repro.configs.base import CommConfig
 from repro.core.addest import AddEst
 from repro.core.codec import NONE_CODEC, SIZE_ADAPTIVE, Codec, get_codec
-from repro.core.events import (DEFAULT_LINK, FlowResult, FlowSpec,
-                               perturb_flows, run_flows)
+from repro.core import events as _ev
+from repro.core.events import (DEFAULT_LINK, FlowBatch, FlowResult, FlowSpec,
+                               ResultBatch, concat_batches, perturb_batch,
+                               perturb_flows, run_flow_batch, run_flows,
+                               serialized_chain)
 from repro.core.network_model import RingAllReduce, make_cost_model
 from repro.core.schedule import (CodecLowering, CommPlan, assign_codec,
                                  assign_rails, canonical_scheduler,
                                  clone_flows, codec_compute_seconds,
-                                 lower_buckets, plan_to_flows)
+                                 lower_buckets, plan_to_flow_batch,
+                                 plan_to_flows)
 from repro.core.timeline import GradTimeline
 from repro.core.transport import Transport, get_transport
 
@@ -174,50 +178,11 @@ def fuse_buckets(timeline: GradTimeline, comm: CommConfig) -> List[Bucket]:
     return buckets
 
 
-def _serialized_closed_form(ready: np.ndarray, dur: np.ndarray
-                            ) -> Tuple[np.ndarray, np.ndarray]:
-    """Vectorized max-plus recurrence, bit-exact with the serial loop.
-
-    Solves ``start_i = max(ready_i, end_{i-1}); end_i = start_i + dur_i``
-    with numpy.  Exactness hinges on two properties: ``np.cumsum`` is a
-    strict left fold (the same float additions in the same order as the
-    serial loop), and folding each chain's start into the summand array
-    (``cumsum([ready_j, dur_j, ...])``) preserves the serial association
-    ``((ready_j + dur_j) + dur_{j+1}) + ...``.
-
-    Chain starts (indices where the link went idle) are found iteratively:
-    begin with the superset ``ready_i >= ready_{i-1} + dur_{i-1}`` (every
-    true chain start satisfies it, since ``end >= ready + dur``), compute
-    ends as if those were the starts, then demote any candidate whose gap
-    closes (``ready_j < end_{j-1}``).  Ends only grow when chains merge, so
-    each pass removes at least one false candidate and the fixpoint makes
-    exactly the serial loop's max choices.
-    """
-    n = ready.shape[0]
-    cand = np.empty(n, dtype=bool)
-    cand[0] = True
-    if n > 1:
-        cand[1:] = ready[1:] >= ready[:-1] + dur[:-1]
-    starts = np.empty(n)
-    ends = np.empty(n)
-    for _ in range(n):
-        idx = np.flatnonzero(cand)
-        if idx.shape[0] == n:
-            # every flow finds the link idle: no queueing anywhere
-            starts[:] = ready
-            ends[:] = ready + dur
-        else:
-            bounds = np.append(idx, n)
-            for a, b in zip(bounds[:-1], bounds[1:]):
-                seg = np.cumsum(np.concatenate(([ready[a]], dur[a:b])))
-                starts[a] = ready[a]
-                starts[a + 1:b] = seg[1:-1]
-                ends[a:b] = seg[1:]
-        bad = idx[1:][ready[idx[1:]] < ends[idx[1:] - 1]]
-        if not bad.shape[0]:
-            return starts, ends
-        cand[bad] = False
-    raise AssertionError("closed-form chain decomposition did not converge")
+# The max-plus chain solver moved to repro.core.events (serialized_chain):
+# the columnar lowering's codec encode chain needs it too.  Re-exported
+# under its old name for the fifo fast path and the tests pinning its
+# exactness against the serial loop.
+_serialized_closed_form = serialized_chain
 
 
 def _fifo_fast_results(plan: CommPlan, flows: Sequence[FlowSpec]
@@ -256,6 +221,30 @@ def _fifo_fast_results(plan: CommPlan, flows: Sequence[FlowSpec]
     return [new(FlowResult, (f.op_id, job, s, w, e, False))
             for f, s, w, e in zip(flows, starts.tolist(), wire_ends.tolist(),
                                   ends.tolist())]
+
+
+def _fifo_fast_batch(plan: CommPlan, batch: FlowBatch
+                     ) -> Optional[ResultBatch]:
+    """Columnar twin of :func:`_fifo_fast_results`.
+
+    Same dispatch checks, run on the columns instead of per tuple: hold
+    semantics with precomputed durations, one job, one link, ready times
+    non-decreasing.  Anything else returns ``None`` for the engine path.
+    """
+    if not plan.serialized_fifo:
+        return None
+    n = batch.n
+    if n < _FASTPATH_MIN_OPS:
+        return None
+    if len(batch.jobs) != 1 or len(batch.links) != 1:
+        return None
+    dur = batch.duration
+    if (not batch.hold.all() or np.isnan(dur).any()
+            or not (batch.ready[1:] >= batch.ready[:-1]).all()):
+        return None
+    starts, ends = serialized_chain(batch.ready, dur)
+    return ResultBatch(batch.op_id, batch.jobs, batch.job, starts,
+                       starts + batch.work, ends, np.zeros(n, dtype=bool))
 
 
 # below ~2 dozen ops the event calendar is cheaper than numpy dispatch; the
@@ -301,6 +290,41 @@ def _codec_lowerings(plan: CommPlan, resolved: Codec, base_cost, codec_cost
     return table
 
 
+def _serve_from_batch(plan: CommPlan, buckets: Sequence[Bucket],
+                      rb: ResultBatch) -> Tuple[List[Bucket], float, float]:
+    """Columnar twin of :func:`_serve_plan`'s result-mapping loop.
+
+    Bucket chunks are contiguous in op order under every scheduler, so the
+    per-bucket min(start)/max(end) are segment reductions; ``busy`` stays a
+    strict left fold over op order (``sum`` of a list — ``np.sum`` is
+    pairwise and would re-associate the adds).  Bucket fields are cast back
+    to python floats at this boundary so downstream JSON writers never see
+    ``np.float64``.
+    """
+    if rb.n == 0:
+        return [], 0.0, 0.0
+    bid = np.fromiter((op.bucket_id for op in plan.ops), dtype=np.intp,
+                      count=rb.n)
+    seg = np.concatenate(([0], np.flatnonzero(bid[1:] != bid[:-1]) + 1))
+    ids = bid[seg]
+    s_min = np.minimum.reduceat(rb.start, seg)
+    e_max = np.maximum.reduceat(rb.end, seg)
+    nb = plan.n_buckets
+    start = np.full(nb, np.inf)
+    end = np.zeros(nb)
+    np.minimum.at(start, ids, s_min)       # tolerates non-contiguous ids
+    np.maximum.at(end, ids, e_max)
+    occ = rb.end - rb.start if plan.scheduler == "fifo" \
+        else rb.wire_end - rb.start
+    busy = sum(occ.tolist())
+    served = [Bucket(b.flush_time, b.size, b.n_tensors,
+                     float(start[i]) if start[i] != np.inf else b.flush_time,
+                     float(end[i]))
+              for i, b in enumerate(buckets)]
+    t_sync = max((b.end for b in served), default=0.0)
+    return served, t_sync, busy
+
+
 def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 tr: Transport, *, job: str = "job0",
                 results: Optional[Sequence[FlowResult]] = None,
@@ -316,8 +340,25 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
     — the fifo fast path stays dispatch-checked on the *perturbed* flows,
     so it still applies whenever the jittered ready order happens to stay
     monotone, and falls back to the engine otherwise.
+
+    Plans at or above the engine's small-plan threshold lower columnar
+    (:func:`~repro.core.schedule.plan_to_flow_batch` straight into
+    :meth:`~repro.core.events.NetworkEngine.run_batch`, no tuple
+    materialization); ``REPRO_SIM_FASTPATH=0`` disables that dispatch and
+    the fifo closed form together.
     """
     if results is None:
+        if _fastpath_enabled() and len(plan.ops) >= _ev._SMALL_PLAN_MAX_FLOWS:
+            batch = plan_to_flow_batch(plan, cost, tr.per_tensor_overhead,
+                                       job=job, n_rails=n_rails,
+                                       codecs=codecs)
+            if jitter > 0.0:
+                batch = perturb_batch(batch, jitter, jitter_seed, stream)
+            rb = _fifo_fast_batch(plan, batch)
+            if rb is None:
+                rb = run_flow_batch(batch, rails={DEFAULT_LINK: n_rails}
+                                    if n_rails > 1 else None)
+            return _serve_from_batch(plan, buckets, rb)
         flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job,
                               n_rails=n_rails, codecs=codecs)
         if jitter > 0.0:
@@ -484,14 +525,15 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     codec_cost = None if free else RingAllReduce(n_workers, eff_bw, addest,
                                                  resolved.wire_ratio)
 
-    jobs = []
-    all_flows = []
-    base = 0
     # co-located jobs usually share one timeline object ([tl] * n_jobs):
-    # lower it once and relabel per job (clone_flows is bit-identical to a
-    # fresh plan_to_flows call), so an n-job cell costs one lowering, not n
+    # lower it once and relabel per job (FlowBatch.relabel / clone_flows is
+    # bit-identical to a fresh lowering), so an n-job cell costs one
+    # lowering, not n.  Plans are built first so the columnar-vs-tuple
+    # decision can see the cell's total flow count.
     lowered: dict = {}
-    for j, tl in enumerate(timelines):
+    meta = []
+    total_ops = 0
+    for tl in timelines:
         got = lowered.get(id(tl))
         if got is None:
             buckets = fuse_buckets(tl, comm)
@@ -503,25 +545,66 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             if not free:
                 plan = assign_codec(plan, resolved.name, policy=policy)
                 codecs = _codec_lowerings(plan, resolved, cost, codec_cost)
-            flows0 = plan_to_flows(plan, cost, tr.per_tensor_overhead,
-                                   op_id_base=0, n_rails=n_rails,
-                                   codecs=codecs)
-            got = lowered[id(tl)] = (buckets, plan, flows0, codecs)
-        buckets, plan, flows0, codecs = got
-        flows = clone_flows(flows0, base, f"job{j}")
-        if jitter > 0.0:
-            flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
-        base += len(flows)
-        jobs.append((tl, buckets, plan, codecs, len(flows)))
-        all_flows.extend(flows)
+            got = lowered[id(tl)] = [buckets, plan, codecs, None]
+        meta.append(got)
+        total_ops += len(got[1].ops)
 
-    results = run_flows(all_flows, rails={DEFAULT_LINK: n_rails}
-                        if n_rails > 1 else None)
+    # the whole cell goes columnar (lower once, relabel + jitter the
+    # columns, one run_batch) when its combined flow count clears the
+    # engine's small-plan threshold; small cells keep the tuple path and
+    # its list-based setup.  REPRO_SIM_FASTPATH=0 forces the tuple path.
+    use_batch = (_fastpath_enabled()
+                 and total_ops >= _ev._SMALL_PLAN_MAX_FLOWS)
+    rails = {DEFAULT_LINK: n_rails} if n_rails > 1 else None
+    base = 0
+    counts = []
+    if use_batch:
+        parts: List[FlowBatch] = []
+        for j, got in enumerate(meta):
+            if got[3] is None:
+                got[3] = plan_to_flow_batch(got[1], cost,
+                                            tr.per_tensor_overhead,
+                                            op_id_base=0, n_rails=n_rails,
+                                            codecs=got[2])
+            bj = got[3].relabel(base, f"job{j}")
+            if jitter > 0.0:
+                bj = perturb_batch(bj, jitter, jitter_seed, stream=j)
+            base += bj.n
+            counts.append(bj.n)
+            parts.append(bj)
+        rb = run_flow_batch(concat_batches(parts), rails=rails)
+    else:
+        all_flows: List[FlowSpec] = []
+        for j, got in enumerate(meta):
+            if got[3] is None:
+                got[3] = plan_to_flows(got[1], cost, tr.per_tensor_overhead,
+                                       op_id_base=0, n_rails=n_rails,
+                                       codecs=got[2])
+            flows = clone_flows(got[3], base, f"job{j}")
+            if jitter > 0.0:
+                flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
+            base += len(flows)
+            counts.append(len(flows))
+            all_flows.extend(flows)
+        results = run_flows(all_flows, rails=rails)
+
     out: List[SimResult] = []
     pos = 0
-    for j, (tl, buckets, plan, codecs, n_flows) in enumerate(jobs):
-        served, t_sync, busy = _serve_plan(plan, buckets, cost, tr,
-                                           results=results[pos:pos + n_flows])
+    for j, got in enumerate(meta):
+        tl = timelines[j]
+        buckets, plan, codecs = got[0], got[1], got[2]
+        n_flows = counts[j]
+        if use_batch:
+            sub = ResultBatch(rb.op_id[pos:pos + n_flows], rb.jobs,
+                              rb.job[pos:pos + n_flows],
+                              rb.start[pos:pos + n_flows],
+                              rb.wire_end[pos:pos + n_flows],
+                              rb.end[pos:pos + n_flows],
+                              rb.contended[pos:pos + n_flows])
+            served, t_sync, busy = _serve_from_batch(plan, buckets, sub)
+        else:
+            served, t_sync, busy = _serve_plan(
+                plan, buckets, cost, tr, results=results[pos:pos + n_flows])
         pos += n_flows
         if not served:
             t_sync = tl.t_back

@@ -1,0 +1,197 @@
+"""Columnar/NamedTuple bit-identity for the structure-of-arrays pipeline.
+
+The FlowSpec tuple path is the reference; every columnar stage must put
+*the same float values* in its columns:
+
+- ``plan_to_flow_batch`` vs ``plan_to_flows`` element-wise across
+  scheduler x n_rails x codec x topology;
+- ``FlowBatch.relabel`` vs ``clone_flows``;
+- ``perturb_batch`` vs ``perturb_flows`` at matched seed/stream;
+- the simulator's columnar dispatch (``_serve_plan`` /
+  ``simulate_contention``) vs the tuple path under
+  ``REPRO_SIM_FASTPATH=0``, through buckets, busy time and utilization.
+
+Equality below is ``==`` on the column values — no tolerances.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.core.addest import AddEst
+from repro.core.codec import NONE_CODEC, get_codec
+from repro.core.events import (FlowBatch, concat_batches, perturb_batch,
+                               perturb_flows)
+from repro.core.network_model import make_cost_model
+from repro.core.schedule import (assign_codec, assign_rails, clone_flows,
+                                 lower_buckets, plan_to_flow_batch,
+                                 plan_to_flows)
+from repro.core.simulator import _codec_lowerings, fuse_buckets
+from repro.core.timeline import from_cnn
+
+GBPS = 1e9 / 8
+ADDEST = AddEst.v100()
+
+
+@pytest.fixture(scope="module")
+def raw_buckets():
+    tl = from_cnn("vgg16")
+    return [(b.flush_time, b.size, b.n_tensors)
+            for b in fuse_buckets(tl, CommConfig())]
+
+
+def assert_batch_equal(flows, batch, tag=""):
+    """The batch's columns hold exactly the tuple path's values."""
+    ref = FlowBatch.from_flows(flows)
+    assert ref.jobs == batch.jobs, tag
+    assert ref.links == batch.links, tag
+    for f in ref._fields:
+        a, b = getattr(ref, f), getattr(batch, f)
+        if isinstance(a, tuple):
+            continue
+        if a.dtype.kind == "f":
+            eq = (a == b) | (np.isnan(a) & np.isnan(b))
+        else:
+            eq = a == b
+        assert eq.all(), (tag, f, np.flatnonzero(~eq)[:5])
+
+
+def _lowered(raw, scheduler, n_rails, codec_name, topology="ring"):
+    cost = make_cost_model(64, 25 * GBPS, ADDEST, topology=topology,
+                           n_pods=4)
+    plan = lower_buckets(raw, scheduler=scheduler, n_chunks=8)
+    if n_rails > 1:
+        plan = assign_rails(plan, n_rails)
+    codecs = None
+    if codec_name is not None:
+        resolved = (NONE_CODEC if codec_name == "none"
+                    else get_codec(codec_name))
+        plan = assign_codec(plan, resolved.name,
+                            policy="size-adaptive" if codec_name == "topk"
+                            else "uniform")
+        codec_cost = make_cost_model(64, 25 * GBPS, ADDEST,
+                                     topology=topology, n_pods=4,
+                                     compression_ratio=resolved.wire_ratio)
+        codecs = _codec_lowerings(plan, resolved, cost, codec_cost)
+    return plan, cost, codecs
+
+
+@pytest.mark.parametrize("scheduler", ["fifo", "priority", "chunked"])
+@pytest.mark.parametrize("n_rails", [1, 2, 4])
+@pytest.mark.parametrize("codec_name", [None, "none", "int8", "topk"])
+def test_plan_to_flow_batch_matches_tuple_path(raw_buckets, scheduler,
+                                               n_rails, codec_name):
+    plan, cost, codecs = _lowered(raw_buckets, scheduler, n_rails,
+                                  codec_name)
+    flows = plan_to_flows(plan, cost, 5e-6, n_rails=n_rails, codecs=codecs)
+    batch = plan_to_flow_batch(plan, cost, 5e-6, n_rails=n_rails,
+                               codecs=codecs)
+    assert_batch_equal(flows, batch)
+    # and the round trip back to tuples is lossless
+    assert batch.to_flows() == flows
+
+
+@pytest.mark.parametrize("topology",
+                         ["hierarchical", "switchml", "param_server"])
+def test_plan_to_flow_batch_vectorized_cost_models(raw_buckets, topology):
+    for codec_name in (None, "ternary"):
+        plan, cost, codecs = _lowered(raw_buckets, "chunked", 1, codec_name,
+                                      topology=topology)
+        flows = plan_to_flows(plan, cost, 5e-6, codecs=codecs)
+        batch = plan_to_flow_batch(plan, cost, 5e-6, codecs=codecs)
+        assert_batch_equal(flows, batch, topology)
+
+
+def test_relabel_matches_clone_flows(raw_buckets):
+    plan, cost, _ = _lowered(raw_buckets, "chunked", 2, None)
+    flows = plan_to_flows(plan, cost, 5e-6, n_rails=2)
+    batch = plan_to_flow_batch(plan, cost, 5e-6, n_rails=2)
+    base = 0
+    for j in range(5):
+        cloned = clone_flows(flows, base, f"job{j}")
+        relabeled = batch.relabel(base, f"job{j}")
+        assert_batch_equal(cloned, relabeled, j)
+        base += len(flows)
+    # identity relabel returns the batch itself — the O(1) fast path
+    assert batch.relabel(0, "job0") is batch
+
+
+@pytest.mark.parametrize("jitter", [1e-5, 2e-3])
+def test_perturb_batch_matches_perturb_flows(raw_buckets, jitter):
+    plan, cost, _ = _lowered(raw_buckets, "priority", 1, None)
+    flows = plan_to_flows(plan, cost, 5e-6)
+    batch = plan_to_flow_batch(plan, cost, 5e-6)
+    for seed, stream in [(0, 0), (7, 0), (7, 3), (2026, 15)]:
+        pf = perturb_flows(flows, jitter, seed, stream=stream)
+        pb = perturb_batch(batch, jitter, seed, stream=stream)
+        assert_batch_equal(pf, pb, (seed, stream))
+    # jitter=0 is the identity, sharing columns
+    assert perturb_batch(batch, 0.0, 1).ready is batch.ready
+
+
+def test_concat_batches_remaps_name_tables(raw_buckets):
+    plan, cost, _ = _lowered(raw_buckets, "chunked", 2, None)
+    flows = plan_to_flows(plan, cost, 5e-6, n_rails=2)
+    batch = plan_to_flow_batch(plan, cost, 5e-6, n_rails=2)
+    parts, all_flows, base = [], [], 0
+    for j in range(3):
+        parts.append(batch.relabel(base, f"job{j}"))
+        all_flows.extend(clone_flows(flows, base, f"job{j}"))
+        base += len(flows)
+    assert_batch_equal(all_flows, concat_batches(parts))
+
+
+def _snap(r):
+    return (r.t_sync, r.t_overhead, r.scaling_factor,
+            r.wire_bytes_per_worker, r.network_utilization,
+            r.codec_compute_s,
+            tuple((b.start, b.end) for b in r.buckets))
+
+
+@pytest.mark.parametrize("scheduler,n_rails,jitter,codec", [
+    ("fifo", 1, 0.0, "none"),
+    ("priority", 1, 2e-3, "none"),
+    ("chunked", 2, 0.0, "int8"),
+    ("chunked", 1, 1e-4, "size-adaptive"),
+])
+def test_columnar_dispatch_matches_tuple_path(monkeypatch, scheduler,
+                                              n_rails, jitter, codec):
+    """The simulator's columnar dispatch (fastpath on) reproduces the
+    tuple path (REPRO_SIM_FASTPATH=0) exactly, solo and contended."""
+    from repro.core.simulator import simulate, simulate_contention
+
+    tl = from_cnn("vgg16")
+    kw = dict(n_workers=64, bandwidth=25 * GBPS, scheduler=scheduler,
+              n_chunks=16, n_rails=n_rails, jitter=jitter, jitter_seed=3,
+              codec=codec, transport="horovod_tcp")
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "0")
+    solo_ref = simulate(tl, **kw)
+    cont_ref = simulate_contention([tl] * 4, **kw)
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "1")
+    solo_new = simulate(tl, **kw)
+    cont_new = simulate_contention([tl] * 4, **kw)
+    assert _snap(solo_ref) == _snap(solo_new)
+    assert [_snap(r) for r in cont_ref] == [_snap(r) for r in cont_new]
+
+
+def test_small_plans_never_take_columnar_setup(monkeypatch):
+    """Below the engine's small-plan threshold the simulator must not
+    build a FlowBatch at all — paper-size cells keep the list path."""
+    from repro.core import simulator as sim
+    from repro.core.simulator import simulate
+
+    calls = []
+    orig = sim.plan_to_flow_batch
+    monkeypatch.setattr(sim, "plan_to_flow_batch",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    tl = from_cnn("vgg16")
+    r = simulate(tl, n_workers=8, bandwidth=25 * GBPS, scheduler="fifo")
+    assert r.t_sync > 0.0
+    assert not calls, "columnar lowering engaged on a paper-size plan"
+    # and a big chunked plan does engage it
+    simulate(tl, n_workers=8, bandwidth=25 * GBPS, scheduler="chunked",
+             n_chunks=32)
+    assert calls

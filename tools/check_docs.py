@@ -15,6 +15,11 @@ Plus one cross-reference check: every committed golden artifact
 (``.github/workflows/ci.yml`` — so it actually gates something) and
 ``docs/GOLDEN_ARTIFACTS.md`` (so its refresh procedure is documented).
 
+And one bench cross-reference: every backticked snake_case metric name
+in the README *Performance* table must be a key of the committed bench
+baseline (``artifacts/bench/BENCH_sweep.json`` ``metrics``), so the
+perf table cannot quote numbers the bench no longer produces.
+
 Snippets containing an obvious placeholder (``<suite>``, ``...``,
 ``{run,...}``) are skipped as templates.  The gate also enforces a floor
 on how many lines/names it found, so a regex regression cannot silently
@@ -107,6 +112,41 @@ def check_file(path: Path, known: set, parser) -> Tuple[List[str], int, int]:
     return failures, n_grids, n_lines
 
 
+_METRIC_RE = re.compile(r"`([a-z0-9]+(?:_[a-z0-9]+)+)`")
+
+
+def check_perf_table_metrics() -> Tuple[List[str], int]:
+    """README Performance-table metric names must exist in the baseline.
+
+    The perf table labels every number with its ``BENCH_sweep.json``
+    metric key in backticks; a renamed or dropped metric must take its
+    README row with it, or the table quotes numbers nothing produces."""
+    import json
+
+    failures: List[str] = []
+    readme = (REPO / "README.md").read_text()
+    bench = REPO / "artifacts" / "bench" / "BENCH_sweep.json"
+    if not bench.exists():
+        return ["artifacts/bench/BENCH_sweep.json is missing (the README "
+                "Performance table references its metrics)"], 0
+    metrics = set(json.loads(bench.read_text())["metrics"])
+
+    m = re.search(r"^## Performance$(.*?)(?=^## )", readme,
+                  re.M | re.S)
+    if not m:
+        return ["README.md: no `## Performance` section found; the perf "
+                "table metric check may have rotted"], 0
+    names = set()
+    for line in m.group(1).splitlines():
+        if line.lstrip().startswith("|"):
+            names.update(_METRIC_RE.findall(line))
+    for name in sorted(names - metrics):
+        failures.append(
+            f"README.md: perf table references `{name}` but it is not a "
+            f"metric in artifacts/bench/BENCH_sweep.json")
+    return failures, len(names)
+
+
 def check_golden_references() -> Tuple[List[str], int]:
     """Every artifacts/golden/*.json must be gated in CI and documented.
 
@@ -161,6 +201,15 @@ def main() -> int:
     if n_goldens == 0:
         failures.append("extractor found no artifacts/golden/*.json; "
                         "the golden cross-reference check may have rotted")
+
+    perf_fails, n_metrics = check_perf_table_metrics()
+    failures.extend(perf_fails)
+    print(f"README.md: {n_metrics} perf-table metric name(s) checked "
+          f"against artifacts/bench/BENCH_sweep.json")
+    if n_metrics < 5:
+        failures.append(
+            f"extractor found only {n_metrics} perf-table metric names "
+            f"(< 5); the perf-table metric check may have rotted")
 
     if total_lines < MIN_CLI_LINES:
         failures.append(
