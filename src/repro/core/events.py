@@ -154,7 +154,10 @@ import numpy as np
 DEFAULT_LINK = "nic"
 DEFAULT_JOB = "job0"
 
-_DONE, _ADMIT = 0, 1       # calendar event kinds; completions sort first
+# calendar event kinds: completions sort first at a tie, then faults (a
+# completion landing exactly at a fault instant still completes), then
+# admissions (a fault precedes any same-time admission it should gate)
+_DONE, _FAULT, _ADMIT = 0, 1, 2
 _INF = float("inf")
 _NAN = float("nan")
 
@@ -184,7 +187,11 @@ class FlowSpec(NamedTuple):
       all-reduce); ``duration``, when given, must equal ``work + latency``
       up to the caller's own float rounding — it is used verbatim for the
       closed-form uncontended completion of ``hold`` flows, which is what
-      makes the fifo schedule bit-exact with the legacy serialized loop.
+      makes the fifo schedule bit-exact with the legacy serialized loop;
+    - ``worker`` attributes the flow to a physical worker for the fault
+      layer (:mod:`repro.core.faults`): a :class:`ChurnEvent` dropping
+      worker ``w`` cancels the job's pending flows with ``worker == w``.
+      Ignored unless the engine runs with churn events.
     """
 
     op_id: int
@@ -197,6 +204,7 @@ class FlowSpec(NamedTuple):
     hold: bool = False               # job held busy through the latency
     duration: Optional[float] = None  # precomputed work+latency (hold flows)
     rail: int = 0                    # which rail of a multi-rail link
+    worker: int = 0                  # owning worker (fault attribution)
 
 
 class FlowResult(NamedTuple):
@@ -220,6 +228,58 @@ class FlowResult(NamedTuple):
     def occupancy(self) -> float:
         """Time this flow kept its serialization resource busy."""
         return self.end - self.start
+
+
+class ChurnEvent(NamedTuple):
+    """One membership change of a job's worker fleet, at engine level.
+
+    ``kind == "drop"``: at time ``t`` worker ``worker`` leaves the fleet —
+    the job's in-flight flow (whoever owns it) is pulled back to restart
+    after the re-bucketing stall, and every pending flow with a matching
+    ``FlowSpec.worker`` is cancelled (it completes trivially at ``t``:
+    the re-formed collective skips the dead worker's buckets this
+    iteration).  ``kind == "rejoin"``: the worker comes back — only the
+    pull-back and the stall apply (its cancelled flows stay cancelled;
+    re-admission costs, not recovered work, are the priced quantity).
+    ``stall`` is the re-bucketing/remap cost: the job admits nothing
+    before ``t + stall``.  ``job`` matches the flow's job name exactly or
+    as a rail-lane prefix (``job0`` also hits ``job0@r1``).  Events are
+    plain data — :func:`repro.core.faults.churn_events` draws them from
+    the seeded fault stream.
+    """
+
+    t: float
+    job: str
+    kind: str                        # "drop" | "rejoin"
+    worker: int = -1                 # dropped worker (-1: no cancellation)
+    stall: float = 0.0               # re-bucketing stall, seconds
+
+
+def _jitter_stream(seed: int, stream: int, *extra: int) -> np.random.Generator:
+    """The engine-wide perturbation RNG: ``(seed, stream[, substream])``.
+
+    One construction shared by every stochastic scenario axis (per-flow
+    jitter, correlated fault delays, bandwidth skew, churn arrivals), so
+    the determinism contract — draws depend only on the explicit key,
+    never on process/thread/global state — holds everywhere by
+    construction.  ``extra`` selects an independent substream for draws
+    that must not consume the base stream (worker-level draws, churn
+    arrivals); the bare ``(seed, stream)`` stream is the one
+    :func:`perturb_flows` has always used.
+    """
+    return np.random.default_rng(np.random.SeedSequence(
+        entropy=int(seed), spawn_key=(int(stream), *map(int, extra))))
+
+
+def jitter_delays(n: int, jitter: float, seed: int,
+                  stream: int = 0) -> np.ndarray:
+    """The independent-jitter draws: ``jitter * Exp(1)`` per flow.
+
+    Depends only on ``(seed, stream, n)`` and scales linearly in
+    ``jitter`` (same draws, scaled) — the contract both perturb
+    functions and the fault model's ``correlation=0`` mode share.
+    """
+    return jitter * _jitter_stream(seed, stream).standard_exponential(n)
 
 
 def perturb_flows(flows: Sequence[FlowSpec], jitter: float, seed: int,
@@ -247,9 +307,7 @@ def perturb_flows(flows: Sequence[FlowSpec], jitter: float, seed: int,
     """
     if jitter <= 0.0 or not flows:
         return list(flows)
-    rng = np.random.default_rng(
-        np.random.SeedSequence(entropy=int(seed), spawn_key=(int(stream),)))
-    delays = (jitter * rng.standard_exponential(len(flows))).tolist()
+    delays = jitter_delays(len(flows), jitter, seed, stream).tolist()
     return [f._replace(ready=f.ready + d) for f, d in zip(flows, delays)]
 
 
@@ -296,6 +354,7 @@ class FlowBatch(NamedTuple):
     links: Tuple[str, ...]
     link: np.ndarray                 # intp codes into ``links``
     rail: np.ndarray                 # intp
+    worker: np.ndarray               # intp (fault attribution)
 
     @property
     def n(self) -> int:
@@ -307,7 +366,7 @@ class FlowBatch(NamedTuple):
         if not flows:
             return _EMPTY_BATCH
         (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
-         du_col, rl_col) = zip(*flows)
+         du_col, rl_col, w_col) = zip(*flows)
         jobs, jcode = _intern(job_col)
         links, lcode = _intern(lk_col)
         return cls(
@@ -319,7 +378,8 @@ class FlowBatch(NamedTuple):
             duration=np.array([_NAN if d is None else d for d in du_col]),
             hold=np.asarray(hd_col, dtype=bool),
             jobs=jobs, job=jcode, links=links, link=lcode,
-            rail=np.asarray(rl_col, dtype=np.intp))
+            rail=np.asarray(rl_col, dtype=np.intp),
+            worker=np.asarray(w_col, dtype=np.intp))
 
     def to_flows(self) -> List[FlowSpec]:
         """Materialize the tuple view (NaN durations become ``None``)."""
@@ -330,7 +390,8 @@ class FlowBatch(NamedTuple):
                    self.priority.tolist(),
                    [jobs[c] for c in self.job.tolist()],
                    [links[c] for c in self.link.tolist()],
-                   self.hold.tolist(), du, self.rail.tolist())
+                   self.hold.tolist(), du, self.rail.tolist(),
+                   self.worker.tolist())
         new = tuple.__new__
         return [new(FlowSpec, row) for row in rows]
 
@@ -358,7 +419,7 @@ _EMPTY_BATCH = FlowBatch(
     latency=np.zeros(0), priority=np.zeros(0), duration=np.zeros(0),
     hold=np.zeros(0, dtype=bool), jobs=(), job=np.zeros(0, dtype=np.intp),
     links=(), link=np.zeros(0, dtype=np.intp),
-    rail=np.zeros(0, dtype=np.intp))
+    rail=np.zeros(0, dtype=np.intp), worker=np.zeros(0, dtype=np.intp))
 
 
 class ResultBatch(NamedTuple):
@@ -431,7 +492,8 @@ def concat_batches(batches: Iterable[FlowBatch]) -> FlowBatch:
         hold=np.concatenate([b.hold for b in bs]),
         jobs=tuple(job_table), job=np.concatenate(job_cols),
         links=tuple(link_table), link=np.concatenate(link_cols),
-        rail=np.concatenate([b.rail for b in bs]))
+        rail=np.concatenate([b.rail for b in bs]),
+        worker=np.concatenate([b.worker for b in bs]))
 
 
 def perturb_batch(batch: FlowBatch, jitter: float, seed: int,
@@ -444,9 +506,7 @@ def perturb_batch(batch: FlowBatch, jitter: float, seed: int,
     """
     if jitter <= 0.0 or not batch.n:
         return batch
-    rng = np.random.default_rng(
-        np.random.SeedSequence(entropy=int(seed), spawn_key=(int(stream),)))
-    delays = jitter * rng.standard_exponential(batch.n)
+    delays = jitter_delays(batch.n, jitter, seed, stream)
     return batch._replace(ready=batch.ready + delays)
 
 
@@ -553,7 +613,7 @@ class _Job:
 
     __slots__ = ("order", "rdy", "ptr", "gated", "gptr", "g_rd", "readyq",
                  "n_ready", "free", "busy", "link", "onp", "wk", "rd", "hd",
-                 "lt")
+                 "lt", "apos")
 
     def __init__(self):
         self.order: List[int] = []   # flow indices in (priority, op_id) order
@@ -583,6 +643,9 @@ class _Job:
         self.link: Optional[_Link] = None   # sole link, if homogeneous
         # numpy views along ``order`` for the bulk-commit path (lazy)
         self.onp = self.wk = self.rd = self.hd = self.lt = None
+        # order-position of the in-flight flow (heap mode only; a fault
+        # pulling the flow back needs it to restore the readyq bit)
+        self.apos = -1
 
 
 # below this many flows the engine skips its columnar numpy setup (and the
@@ -632,19 +695,24 @@ class NetworkEngine:
         self.capacities = dict(capacities or {})
         self.rails = dict(rails or {})
 
-    def run(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
+    def run(self, flows: Sequence[FlowSpec],
+            churn: Optional[Sequence[ChurnEvent]] = None
+            ) -> List[FlowResult]:
         """Execute ``flows``; returns results in input order.
 
         Plans below :data:`_SMALL_PLAN_MAX_FLOWS` run the plain-list setup;
         anything larger columnarizes once and runs the batch core — the
         same engine :meth:`run_batch` uses, so tuple and batch callers
         share one large-plan code path (and its bit-identity proofs).
+        ``churn`` events force the batch core regardless of size (the
+        membership-change handler lives only there).
         """
         if not flows:
             return []
-        if len(flows) < _SMALL_PLAN_MAX_FLOWS:
+        if len(flows) < _SMALL_PLAN_MAX_FLOWS and not churn:
             return self._run_small(flows)
-        return self.run_batch(FlowBatch.from_flows(flows)).to_results()
+        return self.run_batch(FlowBatch.from_flows(flows),
+                              churn=churn).to_results()
 
     def _run_small(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
         """Plain-list setup and event loop for paper-size plans.
@@ -659,7 +727,7 @@ class NetworkEngine:
         caps = self.capacities
 
         (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
-         _du_col, rl_col) = zip(*flows)
+         _du_col, rl_col, _w_col) = zip(*flows)
 
         rail_counts = self.rails
         if rail_counts and any(rail_counts.get(nm, 1) > 1
@@ -814,7 +882,7 @@ class NetworkEngine:
                     if len(cal) > sweep_at:
                         # batched stale sweep: one filter pass + heapify
                         # beats popping invalidated projections one by one
-                        cal[:] = [e for e in cal if e[1] == _ADMIT
+                        cal[:] = [e for e in cal if e[1] != _DONE
                                   or e[3] == e[4].version]
                         heapify(cal)
                         sweep_at = max(256, 2 * len(cal))
@@ -929,7 +997,9 @@ class NetworkEngine:
         new = tuple.__new__
         return [new(FlowResult, row) for row in rows]
 
-    def run_batch(self, batch: FlowBatch) -> ResultBatch:
+    def run_batch(self, batch: FlowBatch,
+                  churn: Optional[Sequence[ChurnEvent]] = None
+                  ) -> ResultBatch:
         """Execute a columnar batch; results align with the batch's order.
 
         The large-plan setup is fully vectorized: one global
@@ -941,6 +1011,11 @@ class NetworkEngine:
         bounces to the plain-list path (columnar setup must never engage
         on paper-size plans); either way results are bit-identical to
         ``run(batch.to_flows())``.
+
+        ``churn`` events (membership changes — see :class:`ChurnEvent`)
+        enter the calendar as ``_FAULT`` entries and keep the batch on
+        the columnar core whatever its size; an empty/None ``churn`` is
+        bit-identical to a run that never heard of faults.
         """
         n_total = batch.n
         if not n_total:
@@ -948,7 +1023,7 @@ class NetworkEngine:
             return ResultBatch(batch.op_id, batch.jobs, batch.job,
                                z, np.zeros(0), np.zeros(0),
                                np.zeros(0, dtype=bool))
-        if n_total < _SMALL_PLAN_MAX_FLOWS:
+        if n_total < _SMALL_PLAN_MAX_FLOWS and not churn:
             res = self._run_small(batch.to_flows())
             return ResultBatch(
                 batch.op_id, batch.jobs, batch.job,
@@ -1039,40 +1114,62 @@ class NetworkEngine:
         else:
             job_of = [job_list[0]] * n_total
 
+        if churn:
+            # resolve job names to _Job objects once; sort for a
+            # deterministic seq order at equal fault times.  A name
+            # matches exactly or as a rail-lane prefix (job0 -> job0@r1).
+            jnames = batch.jobs
+            for fe in sorted(churn):
+                matched = [job_list[ci] for ci, nm in enumerate(jnames)
+                           if nm == fe.job or nm.startswith(fe.job + "@")]
+                if not matched:
+                    continue
+                seq += 1
+                cal.append((fe.t if fe.t > 0.0 else 0.0, _FAULT, seq,
+                            matched, fe))
+
         start, wire, end, contended = _run_core(
             n_total, wk_col, lt_col, hd_col, du_col, rd_np, link_of,
-            job_of, cal, seq, batch.work, batch.hold, batch.latency)
+            job_of, cal, seq, batch.work, batch.hold, batch.latency,
+            batch.worker)
         return ResultBatch(batch.op_id, batch.jobs, batch.job,
                            start, wire, end, contended)
 
 
 def run_flows(flows: Sequence[FlowSpec],
               capacities: Optional[Dict[str, float]] = None,
-              rails: Optional[Dict[str, int]] = None) -> List[FlowResult]:
+              rails: Optional[Dict[str, int]] = None,
+              churn: Optional[Sequence[ChurnEvent]] = None
+              ) -> List[FlowResult]:
     """Convenience wrapper: execute ``flows`` on a fresh engine.
 
     ``capacities`` and ``rails`` are per-link-name maps — see
-    :class:`NetworkEngine`.
+    :class:`NetworkEngine`; ``churn`` is a list of membership-change
+    events (:class:`ChurnEvent`).
     """
-    return NetworkEngine(capacities, rails).run(flows)
+    return NetworkEngine(capacities, rails).run(flows, churn=churn)
 
 
 def run_flow_batch(batch: FlowBatch,
                    capacities: Optional[Dict[str, float]] = None,
-                   rails: Optional[Dict[str, int]] = None) -> ResultBatch:
+                   rails: Optional[Dict[str, int]] = None,
+                   churn: Optional[Sequence[ChurnEvent]] = None
+                   ) -> ResultBatch:
     """Columnar :func:`run_flows`: execute a batch on a fresh engine."""
-    return NetworkEngine(capacities, rails).run_batch(batch)
+    return NetworkEngine(capacities, rails).run_batch(batch, churn=churn)
 
 
 def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
-              link_of, job_of, cal, seq, g_wk, g_hd, g_lt):
+              link_of, job_of, cal, seq, g_wk, g_hd, g_lt, g_wr=None):
     """The large-plan event loop over columnar state.
 
     ``wk_col``/``lt_col``/``hd_col``/``du_col`` are plain python lists
     (scalar indexing in the hot loop), ``g_wk``/``g_hd``/``g_lt``/``rd_np``
     the matching numpy columns (the bulk path's gathers); ``du_col`` holds
     NaN where a duration is absent.  ``cal`` arrives as an unheapified
-    list of per-job admission triggers in job first-appearance order.
+    list of per-job admission triggers in job first-appearance order,
+    plus any ``_FAULT`` entries (``g_wr`` is the worker column their
+    dropout cancellation filters on).
     Returns ``(start, wire, end, contended)`` numpy arrays.
     """
     heapify(cal)                # one pass beats n pushes at setup
@@ -1151,6 +1248,90 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
         jb.readyq[jb.gated[gp:j]] = True   # one sliced scatter
         jb.n_ready += j - gp
         jb.gptr = j
+
+    # -- membership change: pull back the wire, cancel the dead worker's
+    # pending flows, stall the survivors through the re-bucketing ----------
+    def _apply_fault(jb: _Job, fe, t: float) -> None:
+        nonlocal n_done, seq, stale
+        stale = 0                   # a fault is committed calendar work
+        # (a) the in-flight transfer is torn down by the membership change
+        # and restarts from scratch after the stall: un-admit it
+        if jb.busy:
+            if jb.gated is None:
+                jb.ptr -= 1
+                i = jb.order[jb.ptr]
+            else:
+                p = jb.apos
+                jb.readyq[p] = True
+                jb.n_ready += 1
+                i = jb.order[p]
+            L = link_of[i]
+            if t > L.t_last:
+                L.S += (t - L.t_last) * L.share
+            L.t_last = t
+            L.heap = [e for e in L.heap if e[1] != i]
+            heapify(L.heap)
+            L.n -= 1
+            L.version += 1
+            if L.n:
+                c = L.cap
+                L.share = 1.0 if c >= L.n else c / L.n
+                seq += 1
+                proj = t + (L.heap[0][0] - L.S) / L.share
+                heappush(cal, (proj if proj > t else t, _DONE, seq,
+                               L.version, L))
+            else:
+                L.all_contended = False
+            contended[i] = False    # readmission re-derives contention
+            jb.busy = False
+        # (b) dropout: the re-formed collective skips the dead worker's
+        # buckets this iteration — its pending flows complete trivially now
+        if fe.kind == "drop" and fe.worker >= 0 and g_wr is not None:
+            onp = jb.onp
+            if onp is None:
+                onp = jb.onp = np.asarray(jb.order, dtype=np.intp)
+            if jb.gated is None:
+                tail = onp[jb.ptr:]
+                dead_m = g_wr[tail] == fe.worker
+                if dead_m.any():
+                    ids = tail[dead_m]
+                    start[ids] = t
+                    wire[ids] = t
+                    end[ids] = t
+                    contended[ids] = False
+                    n_done += int(ids.size)
+                    live = tail[~dead_m]
+                    jb.order = jb.order[:jb.ptr] + live.tolist()
+                    jb.rdy = jb.rdy[:jb.ptr] + rd_np[live].tolist()
+                    jb.onp = None   # invalidate the bulk path's views
+                    jb.wk = None
+            else:
+                wk_pos = g_wr[onp]  # worker per order position
+                pos_r = np.flatnonzero(jb.readyq)
+                dead_r = pos_r[wk_pos[pos_r] == fe.worker]
+                g_tail = jb.gated[jb.gptr:]
+                live_m = wk_pos[g_tail] != fe.worker
+                dead_g = g_tail[~live_m]
+                if dead_r.size or dead_g.size:
+                    ids = onp[np.concatenate((dead_r, dead_g))]
+                    start[ids] = t
+                    wire[ids] = t
+                    end[ids] = t
+                    contended[ids] = False
+                    n_done += int(ids.size)
+                if dead_r.size:
+                    jb.readyq[dead_r] = False
+                    jb.n_ready -= int(dead_r.size)
+                if dead_g.size:
+                    jb.gated = g_tail[live_m]
+                    jb.g_rd = jb.g_rd[jb.gptr:][live_m]
+                    jb.gptr = 0
+        # (c) the priced re-bucketing stall gates the next admission
+        if fe.stall > 0.0:
+            ft = t + fe.stall
+            if ft > jb.free:
+                jb.free = ft
+        _schedule_admit(jb, t)
 
     # -- bulk commit: vectorized saturated stretch on link ``L`` ------------
     def _try_bulk(L: _Link, t0: float, t_cal: float,
@@ -1338,8 +1519,10 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
                 end[idc] = tc + g_lt[idc]
                 ia = int(ids[c])
                 # consume the committed prefix plus the new active flow
+                # (``ids[1:] = onp[pos]``, so ``ia`` sits at ``pos[c-1]``)
                 jb.readyq[pos[:c]] = False
                 jb.n_ready -= c
+                jb.apos = int(pos[c - 1])
             contended[idc] = True
             tl = float(tc[-1])
             start[ia] = tl
@@ -1439,7 +1622,8 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
                 if len(cal) > sweep_at:
                     # batched stale sweep: one filter pass + heapify
                     # beats popping invalidated projections one by one
-                    cal[:] = [e for e in cal if e[1] == _ADMIT
+                    # (non-_DONE entries carry no link/version to check)
+                    cal[:] = [e for e in cal if e[1] != _DONE
                               or e[3] == e[4].version]
                     heapify(cal)
                     sweep_at = max(256, 2 * len(cal))
@@ -1494,6 +1678,7 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
                             p = int(jb.readyq.argmax())
                             jb.readyq[p] = False
                             jb.n_ready -= 1
+                            jb.apos = p
                             readmitted = _admit(jb.order[p], jb, t)
                 if readmitted is None:
                     _schedule_admit(jb, t)
@@ -1521,6 +1706,12 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
                     heappush(cal, (proj, _DONE, seq, L.version, L))
                     break
                 t = proj
+            continue
+
+        if ev[1] == _FAULT:
+            # ---- membership change: apply to every matched job ------------
+            for jb in ev[3]:
+                _apply_fault(jb, ev[4], t)
             continue
 
         # ---- admission event ----------------------------------------------
@@ -1552,6 +1743,7 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
                 p = int(jb.readyq.argmax())
                 jb.readyq[p] = False
                 jb.n_ready -= 1
+                jb.apos = p
                 admitted = _admit(jb.order[p], jb, t)
             elif jb.gptr < jb.g_rd.shape[0]:
                 _schedule_admit(jb, t)

@@ -569,7 +569,8 @@ def plan_to_flow_batch(plan: CommPlan, cost,
                 op_id=op_ids, ready=ready, work=wires, latency=lat,
                 priority=pr, duration=totals + dec, hold=hold,
                 jobs=(job,), job=np.zeros(n, dtype=np.intp),
-                links=links, link=lcode, rail=np.zeros(n, dtype=np.intp))
+                links=links, link=lcode, rail=np.zeros(n, dtype=np.intp),
+                worker=np.zeros(n, dtype=np.intp))
         rail_work = wires * n_rails
         jobs, jcode = _channel_names(
             chans, lambda c: job if c == 0 else f"{job}@r{c}")
@@ -577,7 +578,8 @@ def plan_to_flow_batch(plan: CommPlan, cost,
             op_id=op_ids, ready=ready, work=rail_work, latency=lat,
             priority=pr, duration=lat + rail_work, hold=hold,
             jobs=jobs, job=jcode, links=(link,),
-            link=np.zeros(n, dtype=np.intp), rail=chans)
+            link=np.zeros(n, dtype=np.intp), rail=chans,
+            worker=np.zeros(n, dtype=np.intp))
 
     totals = _time_col(cost, sizes) + pto * nt
     wires = np.minimum(_wire_col(cost, sizes), totals)
@@ -589,7 +591,8 @@ def plan_to_flow_batch(plan: CommPlan, cost,
             op_id=op_ids, ready=ready, work=wires, latency=lat,
             priority=pr, duration=totals, hold=hold,
             jobs=(job,), job=np.zeros(n, dtype=np.intp),
-            links=links, link=lcode, rail=np.zeros(n, dtype=np.intp))
+            links=links, link=lcode, rail=np.zeros(n, dtype=np.intp),
+            worker=np.zeros(n, dtype=np.intp))
     rail_work = wires * n_rails                # per-rail bw = aggregate / n
     jobs, jcode = _channel_names(
         chans, lambda c: job if c == 0 else f"{job}@r{c}")
@@ -597,7 +600,8 @@ def plan_to_flow_batch(plan: CommPlan, cost,
         op_id=op_ids, ready=ready, work=rail_work, latency=lat,
         priority=pr, duration=lat + rail_work, hold=hold,
         jobs=jobs, job=jcode, links=(link,),
-        link=np.zeros(n, dtype=np.intp), rail=chans)
+        link=np.zeros(n, dtype=np.intp), rail=chans,
+        worker=np.zeros(n, dtype=np.intp))
 
 
 def clone_flows(flows: Sequence[FlowSpec], op_id_base: int, job: str, *,
@@ -627,5 +631,5 @@ def clone_flows(flows: Sequence[FlowSpec], op_id_base: int, job: str, *,
             nm = job + f[5][shift:] if f[5].startswith(old_job) else f[5]
             names[f[5]] = nm
         out.append(new(FlowSpec, (f[0] + op_id_base, f[1], f[2], f[3], f[4],
-                                  nm, f[6], f[7], f[8], f[9])))
+                                  nm, f[6], f[7], f[8], f[9], f[10])))
     return out

@@ -53,6 +53,9 @@ from repro.core.events import (DEFAULT_LINK, FlowBatch, FlowResult, FlowSpec,
                                ResultBatch, concat_batches, perturb_batch,
                                perturb_flows, run_flow_batch, run_flows,
                                serialized_chain)
+from repro.core.faults import (FaultModel, apply_faults_batch,
+                               apply_faults_flows, churn_events,
+                               parse_fault_model, worker_codes)
 from repro.core.network_model import RingAllReduce, make_cost_model
 from repro.core.schedule import (CodecLowering, CommPlan, assign_codec,
                                  assign_rails, canonical_scheduler,
@@ -325,12 +328,26 @@ def _serve_from_batch(plan: CommPlan, buckets: Sequence[Bucket],
     return served, t_sync, busy
 
 
+def _fault_horizon(ready: np.ndarray, work: np.ndarray,
+                   latency: np.ndarray) -> float:
+    """The iteration span churn arrivals are drawn over.
+
+    An upper-bound proxy (max over ``ready + work + latency`` of the
+    already-perturbed flows) — any deterministic positive scale works,
+    but computing it identically from columns and from tuple-built arrays
+    keeps both lowering paths' churn draws bit-identical.
+    """
+    return float(np.max(ready + work + latency))
+
+
 def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 tr: Transport, *, job: str = "job0",
                 results: Optional[Sequence[FlowResult]] = None,
                 n_rails: int = 1, jitter: float = 0.0, jitter_seed: int = 0,
                 stream: int = 0,
-                codecs: Optional[dict] = None
+                codecs: Optional[dict] = None,
+                fault: Optional[FaultModel] = None,
+                fault_seed: int = 0, n_workers: int = 1
                 ) -> Tuple[List[Bucket], float, float]:
     """Map per-op flow results back to per-bucket (start, end) + busy time.
 
@@ -340,6 +357,13 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
     — the fifo fast path stays dispatch-checked on the *perturbed* flows,
     so it still applies whenever the jittered ready order happens to stay
     monotone, and falls back to the engine otherwise.
+
+    ``fault`` (a non-null :class:`~repro.core.faults.FaultModel`) applies
+    after jitter: correlated delays and bandwidth skew rewrite the flows
+    (:func:`~repro.core.faults.apply_faults_batch` and its tuple twin),
+    then churn events — if any were drawn — route the run to the engine's
+    membership-change path.  ``fault=None`` leaves every branch of this
+    function untouched, byte for byte.
 
     Plans at or above the engine's small-plan threshold lower columnar
     (:func:`~repro.core.schedule.plan_to_flow_batch` straight into
@@ -354,20 +378,40 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                                        codecs=codecs)
             if jitter > 0.0:
                 batch = perturb_batch(batch, jitter, jitter_seed, stream)
-            rb = _fifo_fast_batch(plan, batch)
+            churn = None
+            if fault is not None and batch.n:
+                codes = worker_codes(plan, n_workers)
+                batch = apply_faults_batch(batch, codes, fault, n_workers,
+                                           fault_seed, stream)
+                churn = churn_events(
+                    fault, n_workers,
+                    _fault_horizon(batch.ready, batch.work, batch.latency),
+                    fault_seed, stream, job=job) or None
+            rb = None if churn else _fifo_fast_batch(plan, batch)
             if rb is None:
                 rb = run_flow_batch(batch, rails={DEFAULT_LINK: n_rails}
-                                    if n_rails > 1 else None)
+                                    if n_rails > 1 else None, churn=churn)
             return _serve_from_batch(plan, buckets, rb)
         flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job,
                               n_rails=n_rails, codecs=codecs)
         if jitter > 0.0:
             flows = perturb_flows(flows, jitter, jitter_seed, stream)
-        if _fastpath_enabled():
+        churn = None
+        if fault is not None and flows:
+            codes = worker_codes(plan, n_workers)
+            flows = apply_faults_flows(flows, codes, fault, n_workers,
+                                       fault_seed, stream)
+            churn = churn_events(
+                fault, n_workers,
+                _fault_horizon(np.array([f.ready for f in flows]),
+                               np.array([f.work for f in flows]),
+                               np.array([f.latency for f in flows])),
+                fault_seed, stream, job=job) or None
+        if _fastpath_enabled() and churn is None:
             results = _fifo_fast_results(plan, flows)
         if results is None:
             results = run_flows(flows, rails={DEFAULT_LINK: n_rails}
-                                if n_rails > 1 else None)
+                                if n_rails > 1 else None, churn=churn)
     start = {b: None for b in range(plan.n_buckets)}
     end = {b: 0.0 for b in range(plan.n_buckets)}
     busy = 0.0
@@ -395,7 +439,9 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
              n_chunks: Optional[int] = None,
              n_rails: int = 1, rail_policy: str = "round-robin",
              jitter: float = 0.0, jitter_seed: int = 0,
-             codec: str = "none", error_feedback: bool = False) -> SimResult:
+             codec: str = "none", error_feedback: bool = False,
+             fault_model: str = "none", churn_rate: float = 0.0,
+             worker_bw_skew: float = 0.0, fault_seed: int = 0) -> SimResult:
     """Run the two-process simulation for one iteration.
 
     ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
@@ -419,6 +465,14 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     deprecated ``compression_ratio`` byte divisor, which now routes
     through the free parametric ``ratio`` codec — is bit-exact with the
     pre-codec build.
+
+    ``fault_model`` (``"none"`` | ``"slowdown:<ms>[:<rho>]"``) with
+    ``churn_rate``/``worker_bw_skew``/``fault_seed`` turn on the
+    unreliable-world axes (:mod:`repro.core.faults`): worker-correlated
+    slowdowns, dropout/rejoin churn with a priced re-bucketing stall, and
+    asymmetric per-worker bandwidth.  All at their defaults resolve to a
+    null model that bypasses the fault layer entirely — bit-identical to
+    the pre-fault engine.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -430,6 +484,9 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     policy, resolved = _resolve_codec(codec, compression_ratio,
                                       error_feedback)
     free = resolved.is_free and policy == "uniform"
+    fm = parse_fault_model(fault_model, churn_rate=churn_rate,
+                           bw_skew=worker_bw_skew)
+    fault = None if fm.is_null else fm
 
     def _cost(ratio: float):
         return make_cost_model(
@@ -453,7 +510,9 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     served, t_sync, busy = _serve_plan(plan, buckets, cost, tr,
                                        n_rails=n_rails, jitter=jitter,
                                        jitter_seed=jitter_seed,
-                                       codecs=codecs)
+                                       codecs=codecs, fault=fault,
+                                       fault_seed=fault_seed,
+                                       n_workers=n_workers)
 
     if not served:
         t_sync = timeline.t_back
@@ -493,7 +552,10 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                         n_rails: int = 1, rail_policy: str = "round-robin",
                         jitter: float = 0.0, jitter_seed: int = 0,
                         codec: str = "none",
-                        error_feedback: bool = False) -> List[SimResult]:
+                        error_feedback: bool = False,
+                        fault_model: str = "none", churn_rate: float = 0.0,
+                        worker_bw_skew: float = 0.0,
+                        fault_seed: int = 0) -> List[SimResult]:
     """Multiple jobs sharing one physical link (fair-share contention).
 
     Each timeline is an independent training job running the same ring
@@ -508,7 +570,11 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     stream ``j`` of ``jitter_seed``), so co-located jobs do not flush in
     lockstep.  ``codec``/``error_feedback`` price gradient compression
     exactly as in :func:`simulate`; each job encodes on its own GPU, so
-    the encode chain embedded in the cloned flows is per job.
+    the encode chain embedded in the cloned flows is per job.  The fault
+    axes (``fault_model``/``churn_rate``/``worker_bw_skew``/``fault_seed``,
+    see :func:`simulate`) apply per job on the jitter streams' numbering
+    (job ``j`` draws from fault stream ``j``), and churn events carry the
+    job's name so a dropout only tears down its own fleet.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -520,6 +586,9 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     policy, resolved = _resolve_codec(codec, compression_ratio,
                                       error_feedback)
     free = resolved.is_free and policy == "uniform"
+    fm = parse_fault_model(fault_model, churn_rate=churn_rate,
+                           bw_skew=worker_bw_skew)
+    fault = None if fm.is_null else fm
     cost = RingAllReduce(n_workers, eff_bw, addest,
                          resolved.wire_ratio if free else 1.0)
     codec_cost = None if free else RingAllReduce(n_workers, eff_bw, addest,
@@ -545,7 +614,7 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             if not free:
                 plan = assign_codec(plan, resolved.name, policy=policy)
                 codecs = _codec_lowerings(plan, resolved, cost, codec_cost)
-            got = lowered[id(tl)] = [buckets, plan, codecs, None]
+            got = lowered[id(tl)] = [buckets, plan, codecs, None, None]
         meta.append(got)
         total_ops += len(got[1].ops)
 
@@ -558,6 +627,7 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     rails = {DEFAULT_LINK: n_rails} if n_rails > 1 else None
     base = 0
     counts = []
+    churn_all: list = []
     if use_batch:
         parts: List[FlowBatch] = []
         for j, got in enumerate(meta):
@@ -569,10 +639,20 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             bj = got[3].relabel(base, f"job{j}")
             if jitter > 0.0:
                 bj = perturb_batch(bj, jitter, jitter_seed, stream=j)
+            if fault is not None and bj.n:
+                if got[4] is None:
+                    got[4] = worker_codes(got[1], n_workers)
+                bj = apply_faults_batch(bj, got[4], fault, n_workers,
+                                        fault_seed, j)
+                churn_all.extend(churn_events(
+                    fault, n_workers,
+                    _fault_horizon(bj.ready, bj.work, bj.latency),
+                    fault_seed, j, job=f"job{j}"))
             base += bj.n
             counts.append(bj.n)
             parts.append(bj)
-        rb = run_flow_batch(concat_batches(parts), rails=rails)
+        rb = run_flow_batch(concat_batches(parts), rails=rails,
+                            churn=churn_all or None)
     else:
         all_flows: List[FlowSpec] = []
         for j, got in enumerate(meta):
@@ -583,10 +663,22 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             flows = clone_flows(got[3], base, f"job{j}")
             if jitter > 0.0:
                 flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
+            if fault is not None and flows:
+                if got[4] is None:
+                    got[4] = worker_codes(got[1], n_workers)
+                flows = apply_faults_flows(flows, got[4], fault, n_workers,
+                                           fault_seed, j)
+                churn_all.extend(churn_events(
+                    fault, n_workers,
+                    _fault_horizon(np.array([f.ready for f in flows]),
+                                   np.array([f.work for f in flows]),
+                                   np.array([f.latency for f in flows])),
+                    fault_seed, j, job=f"job{j}"))
             base += len(flows)
             counts.append(len(flows))
             all_flows.extend(flows)
-        results = run_flows(all_flows, rails=rails)
+        results = run_flows(all_flows, rails=rails,
+                            churn=churn_all or None)
 
     out: List[SimResult] = []
     pos = 0

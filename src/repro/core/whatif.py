@@ -64,11 +64,13 @@ def _cells(spec) -> Dict[tuple, Dict]:
 
 
 def _k(model, servers, bw, transport, ratio=1.0, topo="ring", sched="fifo",
-       n_jobs=1, n_rails=1, jitter_ms=0.0, codec="none"):
+       n_jobs=1, n_rails=1, jitter_ms=0.0, codec="none", fault_model="none",
+       churn_rate=0.0, worker_bw_skew=0.0):
     """An ``index_cells`` key in CELL_AXES order, with trailing-axis
     defaults — figure builders only name the axes their sweep varies."""
     return (model, servers, bw, transport, ratio, topo, sched, n_jobs,
-            n_rails, jitter_ms, codec)
+            n_rails, jitter_ms, codec, fault_model, churn_rate,
+            worker_bw_skew)
 
 def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
                             servers: Optional[Sequence[int]] = None,
@@ -358,6 +360,66 @@ def fig13_compression_regimes(models: Optional[Sequence[str]] = None,
                             regime=classify_regime(
                                 c["t_overhead"], base["t_overhead"],
                                 base["t_batch"], c["codec_compute_s"])))
+    return out
+
+
+# 8 servers x 8 GPUs: the churn grid's fleet size, the W in fig14's
+# churn_rate = W * (1 - p) conversion
+CHURN_FLEET = 8 * GPUS_PER_SERVER
+
+
+def fig14_unreliable_workers(models: Optional[Sequence[str]] = None,
+                             bws: Optional[Sequence[float]] = None,
+                             nines: Sequence[int] = (1, 2, 3, 4),
+                             target: float = 0.95) -> List[Dict]:
+    """Unreliable-world what-if: how many nines of per-worker reliability
+    does each bandwidth tier need to *retain* >= ``target`` of its
+    churn-free scaling factor?
+
+    A fleet of ``W`` workers where each is up with probability
+    ``p = 1 - 10**-nines`` per iteration sees an expected ``W * (1 - p)``
+    dropout events per iteration — the engine's ``churn_rate`` axis.
+    Each row sweeps the nines at one (model, bandwidth) point of the
+    registered ``churn`` grid (fifo, one rail, no slowdown/skew: churn
+    isolated), reporting per nines count the retention
+    ``f_churn / f_churn_free`` and the smallest count that clears
+    ``target`` (None when even the most reliable swept fleet does not).
+    Retention, not absolute scaling, is the right yardstick: the
+    measured-transport baseline tops out well below 0.95 at every
+    bandwidth, so an absolute target would only restate the paper's
+    transport-bound story, not the churn cost."""
+    spec = _grid("churn",
+                 models=tuple(models) if models is not None
+                 else ("resnet50", "vgg16"),
+                 bandwidth_gbps=tuple(float(b) for b in bws)
+                 if bws is not None else (5.0, 10.0, 25.0, 100.0),
+                 scheduler=("fifo",), n_rails=(1,),
+                 fault_model=("none",), worker_bw_skew=(0.0,),
+                 churn_rate=(0.0,) + tuple(CHURN_FLEET * (10.0 ** -k)
+                                           for k in nines))
+    ix = _cells(spec)
+    n = spec.n_servers[0]
+    tr = spec.transport[0]
+    out = []
+    for m in spec.models:
+        for bw in spec.bandwidth_gbps:
+            base = ix[_k(m, n, bw, tr)]["scaling_factor"]
+            row = dict(model=m, bandwidth_gbps=bw, churn_free=base,
+                       nines_needed=None)
+            ret = []
+            for k, cr in zip(nines, spec.churn_rate[1:]):
+                f = ix[_k(m, n, bw, tr, churn_rate=cr)]["scaling_factor"]
+                row[f"nines{k}_retention"] = f / base
+                ret.append((k, f / base))
+            # smallest count that clears the target *and keeps it cleared*
+            # at every higher count — a violent-churn fluke (drops cancel
+            # enough pending wire work to beat the baseline) must not
+            # report a 1-nines fleet as sufficient
+            for i, (k, r) in enumerate(ret):
+                if all(rj >= target for _, rj in ret[i:]):
+                    row["nines_needed"] = k
+                    break
+            out.append(row)
     return out
 
 

@@ -156,6 +156,23 @@ _register(ExperimentSpec(
     scheduler=("fifo", "chunked"), sched_chunks=8, n_jobs=(1, 4),
     codec=("none", "int8", "ternary", "topk:8", "size-adaptive")))
 
+# Unreliable-world axes (the Hivemind / flaky-fleet territory): worker-
+# correlated slowdowns, dropout/rejoin churn with a priced re-bucketing
+# stall, and asymmetric per-worker bandwidth — all seeded via core.faults
+# and composed with the scheduler and rails axes.  The gated claims:
+# fault_model="none" x churn_rate=0 x skew=0 cells are *bitwise* identical
+# to plain simulate (the null model never touches a flow); fifo overhead
+# is monotone in the slowdown scale at fixed seed (shared exponential
+# draws, linear scaling); priority never loses to fifo on t_overhead
+# under churn (the engine re-admits survivors in IR order either way).
+# Gated by artifacts/golden/churn_suite.json in CI.
+_register(ExperimentSpec(
+    name="churn", models=("resnet50", "vgg16"), n_servers=(8,),
+    bandwidth_gbps=(10.0, 100.0), transport=("horovod_tcp",),
+    scheduler=("fifo", "priority"), sched_chunks=8, n_rails=(1, 2),
+    fault_model=("none", "slowdown:1", "slowdown:5"),
+    churn_rate=(0.0, 0.64), worker_bw_skew=(0.0, 0.5), fault_seed=2027))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
@@ -165,6 +182,7 @@ SUITES: Dict[str, Tuple[str, ...]] = {
     "scenario": ("multirail", "straggler"),
     "xxl": ("xxl-contention",),
     "compression": ("compression",),
+    "churn": ("churn",),
 }
 
 

@@ -94,6 +94,10 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
         jitter_seed=spec.jitter_seed,
         codec=cell.codec,
         error_feedback=spec.error_feedback and cell.codec != "none",
+        fault_model=cell.fault_model,
+        churn_rate=cell.churn_rate,
+        worker_bw_skew=cell.worker_bw_skew,
+        fault_seed=spec.fault_seed,
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())

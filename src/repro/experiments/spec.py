@@ -22,17 +22,20 @@ SPEC_VERSION = 1
 # written before the axis existed still index consistently)
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
              "compression_ratio", "topology", "scheduler", "n_jobs",
-             "n_rails", "jitter_ms", "codec")
+             "n_rails", "jitter_ms", "codec", "fault_model", "churn_rate",
+             "worker_bw_skew")
 
 AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
-                 "jitter_ms": 0.0, "codec": "none"}
+                 "jitter_ms": 0.0, "codec": "none", "fault_model": "none",
+                 "churn_rate": 0.0, "worker_bw_skew": 0.0}
 
 # axes added after the first golden artifacts shipped: omitted from
 # serialized cells/specs while at their default, so pre-axis artifacts stay
 # byte-identical and spec hashes (the CI regression gate) never drift for
 # grids that do not sweep them
 _ELIDED_AT_DEFAULT = {"n_jobs": 1, "n_rails": 1, "jitter_ms": 0.0,
-                      "codec": "none"}
+                      "codec": "none", "fault_model": "none",
+                      "churn_rate": 0.0, "worker_bw_skew": 0.0}
 
 
 def axis_value(cell: Dict, axis: str):
@@ -61,6 +64,9 @@ class Cell:
     n_rails: int = 1                # rails splitting the aggregate bandwidth
     jitter_ms: float = 0.0          # mean per-flow flush delay (stragglers)
     codec: str = "none"             # gradient-compression codec (core.codec)
+    fault_model: str = "none"       # worker-correlated slowdown (core.faults)
+    churn_rate: float = 0.0         # expected dropout events per iteration
+    worker_bw_skew: float = 0.0     # per-worker bandwidth asymmetry scale
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
@@ -105,6 +111,9 @@ class ExperimentSpec:
     n_rails: Tuple[int, ...] = (1,)     # multi-rail axis (aggregate bw split)
     jitter_ms: Tuple[float, ...] = (0.0,)   # straggler axis (mean flush delay)
     codec: Tuple[str, ...] = ("none",)  # compression-codec axis (core.codec)
+    fault_model: Tuple[str, ...] = ("none",)    # fault axis (core.faults)
+    churn_rate: Tuple[float, ...] = (0.0,)  # dropout/rejoin rate axis
+    worker_bw_skew: Tuple[float, ...] = (0.0,)  # asymmetric-bw axis
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
@@ -113,6 +122,7 @@ class ExperimentSpec:
     rail_policy: str = "round-robin"    # CommOp -> rail assignment policy
     jitter_seed: int = 0                # seed of the straggler perturbation
     error_feedback: bool = False        # EF-SGD residual cost on lossy codecs
+    fault_seed: int = 0                 # seed of the fault-model draws
 
     # spec fields added after the first golden artifacts shipped, elided
     # from canonical JSON at their default (same contract as the elided
@@ -120,13 +130,16 @@ class ExperimentSpec:
     _ELIDED_FIELDS = (("n_jobs", (1,)), ("n_rails", (1,)),
                       ("jitter_ms", (0.0,)), ("rail_policy", "round-robin"),
                       ("jitter_seed", 0), ("codec", ("none",)),
-                      ("error_feedback", False))
+                      ("error_feedback", False), ("fault_model", ("none",)),
+                      ("churn_rate", (0.0,)), ("worker_bw_skew", (0.0,)),
+                      ("fault_seed", 0))
 
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
         for f in ("models", "n_servers", "bandwidth_gbps", "transport",
                   "compression_ratio", "topology", "scheduler", "n_jobs",
-                  "n_rails", "jitter_ms", "codec"):
+                  "n_rails", "jitter_ms", "codec", "fault_model",
+                  "churn_rate", "worker_bw_skew"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -136,12 +149,15 @@ class ExperimentSpec:
     def expand(self) -> Tuple[Cell, ...]:
         """Cartesian product in stable axis order (model outermost)."""
         return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j),
-                          int(nr), float(jm), cd)
-                     for m, n, bw, t, r, topo, s, j, nr, jm, cd in product(
+                          int(nr), float(jm), cd, fml, float(cr), float(sk))
+                     for m, n, bw, t, r, topo, s, j, nr, jm, cd, fml, cr, sk
+                     in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
                          self.topology, self.scheduler, self.n_jobs,
-                         self.n_rails, self.jitter_ms, self.codec))
+                         self.n_rails, self.jitter_ms, self.codec,
+                         self.fault_model, self.churn_rate,
+                         self.worker_bw_skew))
 
     @property
     def n_cells(self) -> int:
@@ -150,7 +166,8 @@ class ExperimentSpec:
                 * len(self.compression_ratio) * len(self.topology)
                 * len(self.scheduler) * len(self.n_jobs)
                 * len(self.n_rails) * len(self.jitter_ms)
-                * len(self.codec))
+                * len(self.codec) * len(self.fault_model)
+                * len(self.churn_rate) * len(self.worker_bw_skew))
 
     @property
     def workload_units(self) -> int:

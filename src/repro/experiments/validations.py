@@ -380,6 +380,84 @@ def _compression(cells: Sequence[Dict]) -> Check:
             "pure_overhead_at_100g": pure_100g}
 
 
+def _churn(cells: Sequence[Dict]) -> Check:
+    """The unreliable-world claims the churn golden suite gates.
+
+    - a zero-fault cell (``fault_model="none"``, no churn, no skew) is
+      bit-exact with a ``simulate`` call that never heard of the fault
+      axes — the null model is a bypass, not a rewrite;
+    - at fixed seed and no churn, overhead is monotone in the slowdown
+      scale (``none <= slowdown:1 <= slowdown:5``): the exponential
+      draws are shared across the sweep and scale linearly.  Under
+      active churn the claim is deliberately *not* gated — the slowdown
+      stretches the iteration horizon, which moves the churn draw times
+      and can reorder which flows a dropout catches in flight;
+    - bandwidth skew only adds wire work (factors are ``1 + skew *
+      Exp(1) >= 1``), so at no churn overhead is monotone in the skew
+      axis too;
+    - churn never helps: every churned cell's t_sync is >= its
+      churn-free twin's (drops cancel pending flows, but the re-bucket
+      stalls and restarts dominate at the gated seed);
+    - priority never loses to fifo on t_overhead, fault axes included —
+      the engine re-admits survivors in IR order under either schedule;
+    - a fully-faulted cell replays bit-exact through a direct
+      ``simulate`` call with the same fault kwargs (the determinism
+      contract: draws depend only on ``(fault_seed, stream, n)``).
+    """
+    from repro.experiments.spec import axis_value
+    by = {(c["model"], c["bandwidth_gbps"], axis_value(c, "scheduler"),
+           axis_value(c, "n_rails"), axis_value(c, "fault_model"),
+           axis_value(c, "churn_rate"), axis_value(c, "worker_bw_skew")): c
+          for c in cells}
+    over = {k: c["t_overhead"] for k, c in by.items()}
+    fms = ("none", "slowdown:1", "slowdown:5")
+    mono_slow = all(
+        over[(m, bw, s, r, a, 0.0, sk)] <= over[(m, bw, s, r, b, 0.0, sk)]
+        + 1e-9
+        for (m, bw, s, r, fm, cr, sk) in by if fm == "none" and cr == 0.0
+        for a, b in zip(fms, fms[1:]))
+    mono_skew = all(
+        over[(m, bw, s, r, fm, 0.0, 0.0)] <= over[(m, bw, s, r, fm, 0.0, 0.5)]
+        + 1e-9
+        for (m, bw, s, r, fm, cr, sk) in by if sk == 0.0 and cr == 0.0)
+    churn_hurts = all(
+        by[(m, bw, s, r, fm, 0.64, sk)]["t_sync"]
+        >= by[(m, bw, s, r, fm, 0.0, sk)]["t_sync"] - 1e-9
+        for (m, bw, s, r, fm, cr, sk) in by if cr == 0.0)
+    pri_ok = all(over[(m, bw, "priority", r, fm, cr, sk)]
+                 <= over[(m, bw, "fifo", r, fm, cr, sk)] + 1e-9
+                 for (m, bw, s, r, fm, cr, sk) in by if s == "fifo")
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    base = [c for c in cells if axis_value(c, "fault_model") == "none"
+            and axis_value(c, "churn_rate") == 0.0
+            and axis_value(c, "worker_bw_skew") == 0.0
+            and c["model"] == "vgg16"]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"],
+                         scheduler=axis_value(c, "scheduler"), n_chunks=8,
+                         n_rails=axis_value(c, "n_rails")).t_sync
+                == c["t_sync"]
+                for c in base)
+    # fault_seed=2027 is the registered churn grid's seed (grids.py), same
+    # convention as the other validators hardcoding their grid's n_chunks
+    hot = by[("vgg16", 10.0, "priority", 2, "slowdown:5", 0.64, 0.5)]
+    replay = simulate(from_cnn("vgg16"), n_workers=hot["n_workers"],
+                      bandwidth=hot["bandwidth_gbps"] * GBPS,
+                      transport=hot["transport"], scheduler="priority",
+                      n_chunks=8, n_rails=2, fault_model="slowdown:5",
+                      churn_rate=0.64, worker_bw_skew=0.5,
+                      fault_seed=2027).t_sync == hot["t_sync"]
+    return {"zero_fault_matches_simulate_bitwise": exact,
+            "overhead_monotone_in_slowdown_no_churn": mono_slow,
+            "overhead_monotone_in_bw_skew_no_churn": mono_skew,
+            "churn_never_helps_t_sync": churn_hurts,
+            "priority_overhead_le_fifo_under_faults": pri_ok,
+            "faulted_cell_replays_bitwise": replay}
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -396,6 +474,7 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "multirail": _multirail,
     "straggler": _straggler,
     "compression": _compression,
+    "churn": _churn,
 }
 
 

@@ -60,7 +60,48 @@ def make_train_step(api, opt, mesh, comm: CommConfig, lr_fn,
     return train_step
 
 
+def comm_from_args(args) -> CommConfig:
+    """CLI flags -> CommConfig, in one place so the dryrun test and the
+    real launcher cannot diverge.  ``scheduler``/``sched_chunks`` select
+    the comm-schedule IR order ``sync_grads`` issues its collectives in —
+    the same CommPlan the simulator prices, closing the runtime-parity
+    gap (the simulator predicting a priority schedule the runtime could
+    not execute)."""
+    return CommConfig(mode=args.comm_mode, compression=args.compression,
+                      fusion_buffer_mb=args.fusion_mb,
+                      hierarchical=not args.flat_allreduce,
+                      topk_ratio=args.topk_ratio,
+                      scheduler=args.scheduler,
+                      sched_chunks=args.sched_chunks)
+
+
+def dryrun(args) -> dict:
+    """Build the comm config, bucket plan, and IR order without training.
+
+    What the runtime *would* execute: enough for tests (and operators) to
+    check the scheduler wiring end-to-end — CLI flag -> CommConfig ->
+    BucketPlan.comm_plan -> bucket order — without touching the data
+    pipeline or jit."""
+    from repro.parallel.grad_sync import make_plan
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    comm = comm_from_args(args)
+    api = get_model(cfg)
+    params = api.init(jax.random.key(args.seed))
+    plan, _ = make_plan(params, comm.fusion_buffer_mb)
+    order = plan.comm_plan(comm).bucket_order()
+    print(f"[dryrun] {cfg.name} | comm={comm.mode} "
+          f"scheduler={comm.scheduler}/{comm.sched_chunks} | "
+          f"{plan.n_buckets} buckets | issue order: {list(order)}")
+    return {"arch": cfg.name, "dryrun": True, "comm_mode": comm.mode,
+            "scheduler": comm.scheduler, "sched_chunks": comm.sched_chunks,
+            "n_buckets": plan.n_buckets, "bucket_order": list(order)}
+
+
 def run(args) -> dict:
+    if args.dryrun:
+        return dryrun(args)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -68,10 +109,7 @@ def run(args) -> dict:
     if args.batch:
         shape = InputShape(shape.name, shape.seq_len, args.batch, shape.kind)
 
-    comm = CommConfig(mode=args.comm_mode, compression=args.compression,
-                      fusion_buffer_mb=args.fusion_mb,
-                      hierarchical=not args.flat_allreduce,
-                      topk_ratio=args.topk_ratio)
+    comm = comm_from_args(args)
     mesh = build_mesh()
     api = get_model(cfg)
     opt = get_optimizer(args.optimizer)
@@ -144,6 +182,14 @@ def main(argv=None):
     ap.add_argument("--comm-mode", default="auto", choices=["auto", "explicit"])
     ap.add_argument("--compression", default="none",
                     choices=["none", "fp16", "int8", "ternary", "topk"])
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "priority", "chunked"],
+                    help="comm-schedule IR order for explicit grad sync "
+                         "(the order the simulator prices)")
+    ap.add_argument("--sched-chunks", type=int, default=4,
+                    help="chunks per bucket for the pipelined schedulers")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="build the comm plan and bucket order, skip training")
     ap.add_argument("--fusion-mb", type=float, default=64.0)
     ap.add_argument("--topk-ratio", type=float, default=0.01)
     ap.add_argument("--flat-allreduce", action="store_true")

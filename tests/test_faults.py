@@ -1,0 +1,350 @@
+"""Fault-injection layer: parsing, determinism, engine churn semantics,
+and the bitwise contracts (null bypass, correlation-0 == jitter, executor
+and lowering-path bit-identity)."""
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core.events import ChurnEvent, FlowBatch, FlowSpec, run_flows
+from repro.core.faults import (FaultModel, apply_faults_batch,
+                               apply_faults_flows, bw_factors, churn_events,
+                               fault_delays, parse_fault_model, worker_codes)
+from repro.core.simulator import simulate
+from repro.core.timeline import from_cnn
+from repro.core.transport import GBPS
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_fault_model():
+    assert parse_fault_model("none") == FaultModel()
+    assert parse_fault_model("") == FaultModel()
+    fm = parse_fault_model("slowdown:2")
+    assert fm.slowdown == 2e-3 and fm.correlation == 1.0
+    fm = parse_fault_model("slowdown:5:0.25", churn_rate=0.5, bw_skew=0.1)
+    assert fm.slowdown == 5e-3 and fm.correlation == 0.25
+    assert fm.churn_rate == 0.5 and fm.bw_skew == 0.1
+    with pytest.raises(ValueError, match="unknown fault model"):
+        parse_fault_model("speedup:2")
+    with pytest.raises(ValueError, match="outside"):
+        parse_fault_model("slowdown:2:1.5")
+
+
+def test_null_model_detection():
+    assert FaultModel().is_null
+    assert parse_fault_model("none").is_null
+    assert not FaultModel(slowdown=1e-3).is_null
+    assert not FaultModel(churn_rate=0.5).is_null
+    assert not FaultModel(bw_skew=0.1).is_null
+
+
+# ---------------------------------------------------------------------------
+# draws: determinism + structure
+# ---------------------------------------------------------------------------
+
+def test_fault_delays_deterministic_and_correlated():
+    fm = FaultModel(slowdown=2e-3, correlation=1.0)
+    codes = np.array([0, 1, 0, 1, 2], dtype=np.intp)
+    d1 = fault_delays(fm, codes, 3, seed=7)
+    d2 = fault_delays(fm, codes, 3, seed=7)
+    assert np.array_equal(d1, d2)
+    # fully correlated: same worker -> identical delay
+    assert d1[0] == d1[2] and d1[1] == d1[3]
+    assert d1[0] != d1[1]
+    assert fault_delays(FaultModel(), codes, 3, seed=7) is None
+
+
+def test_correlation_zero_is_bitwise_per_flow_jitter():
+    """rho=0 must reduce to jitter_delays on the same stream — the exact
+    draws and the exact single multiply, not a statistical lookalike."""
+    fm = FaultModel(slowdown=3e-3, correlation=0.0)
+    codes = np.zeros(64, dtype=np.intp)
+    d = fault_delays(fm, codes, 8, seed=13, stream=2)
+    want = ev.jitter_delays(64, 3e-3, 13, stream=2)
+    assert np.array_equal(d, want)
+
+
+def test_bw_factors_floor_at_one():
+    fac = bw_factors(FaultModel(bw_skew=0.5), 16, seed=3)
+    assert fac.shape == (16,) and (fac >= 1.0).all()
+    assert bw_factors(FaultModel(), 16, seed=3) is None
+
+
+def test_worker_codes_are_structural():
+    from repro.configs.base import CommConfig
+    from repro.core.schedule import lower_buckets
+    plan = lower_buckets([(0.0, 1e6, 4)] * 6, scheduler="fifo")
+    codes = worker_codes(plan, 4)
+    assert np.array_equal(codes, np.array([op.bucket_id % 4
+                                           for op in plan.ops]))
+
+
+def test_churn_events_deterministic_sorted_paired():
+    fm = FaultModel(churn_rate=3.0, downtime=0.01, rebucket=0.005)
+    a = churn_events(fm, 16, horizon=1.0, seed=5)
+    b = churn_events(fm, 16, horizon=1.0, seed=5)
+    assert a == b and a
+    assert a == sorted(a)
+    drops = [e for e in a if e.kind == "drop"]
+    rejoins = [e for e in a if e.kind == "rejoin"]
+    assert len(drops) == len(rejoins)
+    assert all(0.0 <= e.t < 1.0 for e in drops)
+    assert all(0 <= e.worker < 16 for e in drops)
+    assert churn_events(FaultModel(), 16, 1.0, seed=5) == []
+
+
+# ---------------------------------------------------------------------------
+# lowering-path twins
+# ---------------------------------------------------------------------------
+
+def test_apply_faults_batch_and_flows_bit_identical():
+    fm = FaultModel(slowdown=2e-3, correlation=0.6, bw_skew=0.4)
+    flows = [FlowSpec(op_id=i, ready=0.1 * i, work=1e-3 * (i + 1),
+                      latency=1e-4, job="j") for i in range(12)]
+    codes = np.arange(12, dtype=np.intp) % 5
+    batch = apply_faults_batch(FlowBatch.from_flows(flows), codes, fm, 5,
+                               seed=9)
+    twins = apply_faults_flows(flows, codes, fm, 5, seed=9)
+    assert batch.to_flows() == twins
+    assert batch.worker.tolist() == codes.tolist()
+
+
+def test_flowspec_worker_roundtrips_through_batch():
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, worker=i % 3)
+             for i in range(6)]
+    b = FlowBatch.from_flows(flows)
+    assert b.worker.tolist() == [0, 1, 2, 0, 1, 2]
+    assert b.to_flows() == flows
+
+
+# ---------------------------------------------------------------------------
+# engine churn semantics (hand-built scenario)
+# ---------------------------------------------------------------------------
+
+def test_engine_drop_cancels_dead_worker_and_restarts_wire():
+    """Serial job, unit-work flows, workers alternating 0/1.  A worker-1
+    drop at t=2.5 (stall 0.5) tears down the in-flight worker-0 transfer
+    (restarts from scratch at 3.0), completes the dead worker's pending
+    flow trivially at the drop time, and leaves the finished prefix
+    untouched."""
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, job="j", worker=i % 2)
+             for i in range(4)]
+    base = run_flows(flows)
+    assert [r.end for r in base] == [1.0, 2.0, 3.0, 4.0]
+
+    churn = [ChurnEvent(t=2.5, job="j", kind="drop", worker=1, stall=0.5)]
+    res = {r.op_id: r for r in run_flows(flows, churn=churn)}
+    assert res[0].end == 1.0 and res[1].end == 2.0       # already done
+    assert res[3].start == res[3].end == 2.5             # dead worker's
+    assert res[2].start == 3.0 and res[2].end == 4.0     # torn down, redone
+
+
+def test_engine_rejoin_stalls_without_cancelling():
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, job="j", worker=i % 2)
+             for i in range(3)]
+    churn = [ChurnEvent(t=1.5, job="j", kind="rejoin", worker=-1, stall=0.5)]
+    res = {r.op_id: r for r in run_flows(flows, churn=churn)}
+    # f1 was in flight: torn down at 1.5, restarted at 2.0 after the stall
+    assert res[0].end == 1.0
+    assert res[1].start == 2.0 and res[1].end == 3.0
+    assert res[2].end == 4.0                             # nothing cancelled
+
+
+def test_engine_churn_matches_rail_lane_jobs():
+    """A ChurnEvent's job must also hit the job's rail lanes (job@r1...)."""
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, job="j@r1", worker=0)
+             for i in range(2)]
+    churn = [ChurnEvent(t=0.5, job="j", kind="drop", worker=0, stall=0.0)]
+    res = {r.op_id: r for r in run_flows(flows, churn=churn)}
+    assert res[1].end == 0.5                             # cancelled via lane
+
+
+def test_engine_zero_churn_list_keeps_small_path():
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, job="j")
+             for i in range(3)]
+    assert run_flows(flows, churn=[]) == run_flows(flows)
+    assert run_flows(flows, churn=None) == run_flows(flows)
+
+
+@pytest.mark.parametrize("scheduler", ["fifo", "priority"])
+def test_bulk_commit_bit_identical_under_churn(monkeypatch, scheduler):
+    """The numpy bulk-commit path must fence at _FAULT entries and stay
+    bit-identical to the scalar spin under churn, pointer and heap mode."""
+    from repro.core.schedule import lower_buckets, plan_to_flows
+
+    class _Cost:
+        def time(self, size):
+            return size / 1e9 + 5e-5
+
+        def wire_time(self, size):
+            return size / 1e9
+
+    flows = []
+    for j in range(4):
+        plan = lower_buckets([(i * 1e-4, 2e6 * (i + 1), 4)
+                              for i in range(24)],
+                             scheduler=scheduler, n_chunks=4)
+        fl = plan_to_flows(plan, _Cost(), 1e-6, job=f"j{j}",
+                           op_id_base=len(flows))
+        flows.extend(f._replace(worker=f.op_id % 8) for f in fl)
+    assert len(flows) > ev._SMALL_PLAN_MAX_FLOWS
+    churn = [ChurnEvent(t=5e-4, job="j1", kind="drop", worker=3,
+                        stall=2e-4),
+             ChurnEvent(t=9e-4, job="j2", kind="rejoin", worker=-1,
+                        stall=2e-4),
+             ChurnEvent(t=1.2e-3, job="j0", kind="drop", worker=1,
+                        stall=2e-4)]
+    fast = run_flows(flows, churn=churn)
+    monkeypatch.setattr(ev, "_BULK_MIN_ACTIVE", 10 ** 9)
+    slow = run_flows(flows, churn=churn)
+    monkeypatch.undo()
+    assert fast == slow
+
+
+# ---------------------------------------------------------------------------
+# simulate-level contracts
+# ---------------------------------------------------------------------------
+
+def _sim(**kw):
+    return simulate(from_cnn("resnet50"), n_workers=16,
+                    bandwidth=10.0 * GBPS, transport="horovod_tcp", **kw)
+
+
+def test_zero_fault_simulate_bitwise_identical():
+    """fault_model='none' with no churn/skew must be a byte-for-byte
+    bypass of the fault layer, not a near-miss."""
+    base = _sim()
+    assert _sim(fault_model="none", churn_rate=0.0, worker_bw_skew=0.0,
+                fault_seed=99) == base
+
+
+def test_correlation_zero_simulate_matches_jitter_axis():
+    """slowdown:<ms>:0 must reproduce the jitter axis bitwise (jitter is
+    in seconds, the fault axis string in ms)."""
+    want = _sim(jitter=2e-3, jitter_seed=11)
+    got = _sim(fault_model="slowdown:2:0", fault_seed=11)
+    assert got == want
+
+
+def test_simulate_fault_overhead_monotone_in_slowdown():
+    ts = [_sim(fault_model=f, fault_seed=3).t_sync
+          for f in ("none", "slowdown:1", "slowdown:5")]
+    assert ts[0] <= ts[1] <= ts[2]
+    assert ts[2] > ts[0]
+
+
+def test_simulate_churn_and_skew_replay_bitwise():
+    kw = dict(fault_model="slowdown:2", churn_rate=2.0, worker_bw_skew=0.5,
+              fault_seed=21)
+    assert _sim(**kw) == _sim(**kw)
+    assert _sim(**kw) != _sim(fault_model="slowdown:2", churn_rate=2.0,
+                              worker_bw_skew=0.5, fault_seed=22)
+
+
+def test_simulate_fault_paths_agree_columnar_vs_tuple(monkeypatch):
+    """The columnar and tuple lowerings must produce bit-identical faulted
+    results (shared draws, elementwise-equal application, one engine)."""
+    kw = dict(fault_model="slowdown:3:0.5", churn_rate=1.5,
+              worker_bw_skew=0.3, fault_seed=17, scheduler="priority",
+              n_chunks=8)
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "0")
+    tup = _sim(**kw)
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "1")
+    col = _sim(**kw)
+    assert tup == col
+
+
+def test_simulate_contention_faults_bitwise_and_hurt():
+    from repro.core.simulator import simulate_contention
+    tls = [from_cnn("resnet50")] * 2
+    kw = dict(n_workers=16, bandwidth=10.0 * GBPS)
+    base = simulate_contention(tls, **kw)
+    faulted = simulate_contention(tls, fault_model="slowdown:2",
+                                  churn_rate=1.0, fault_seed=5, **kw)
+    again = simulate_contention(tls, fault_model="slowdown:2",
+                                churn_rate=1.0, fault_seed=5, **kw)
+    assert faulted == again
+    assert sum(r.t_sync for r in faulted) > sum(r.t_sync for r in base)
+    # null model is a bypass under contention too
+    assert simulate_contention(tls, fault_model="none", **kw) == base
+
+
+# ---------------------------------------------------------------------------
+# experiments: axes elided at default, executor bit-identity
+# ---------------------------------------------------------------------------
+
+def test_fault_axes_elided_at_default():
+    from repro.experiments import GRIDS, Cell, ExperimentSpec
+    solo = Cell("resnet50", 2, 10.0, "ideal", 1.0, "ring")
+    for key in ("fault_model", "churn_rate", "worker_bw_skew"):
+        assert key not in solo.to_dict()
+    assert Cell.from_dict(solo.to_dict()) == solo
+    faulted = Cell("resnet50", 2, 10.0, "ideal", 1.0, "ring",
+                   fault_model="slowdown:5", churn_rate=0.64,
+                   worker_bw_skew=0.5)
+    d = faulted.to_dict()
+    assert d["fault_model"] == "slowdown:5" and d["churn_rate"] == 0.64
+    assert Cell.from_dict(d) == faulted
+
+    plain = ExperimentSpec(name="t")
+    for key in ("fault_model", "churn_rate", "worker_bw_skew", "fault_seed"):
+        assert key not in plain.to_dict()
+    swept = ExperimentSpec(name="t", fault_model=("none", "slowdown:5"),
+                           churn_rate=(0.0, 0.64), fault_seed=2027)
+    assert swept.spec_hash() != plain.spec_hash()
+    assert ExperimentSpec.from_dict(swept.to_dict()) == swept
+    # the historical grids' canonical JSON mentions no fault axis
+    assert "fault_model" not in GRIDS["paper-fig1"].canonical_json()
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_executors_bit_identical_on_fault_axes(executor):
+    """Same (seed, fault_model) -> bitwise-identical artifacts regardless
+    of executor: draws depend only on (fault_seed, stream, n), never on
+    which thread or process ran the cell."""
+    from repro.experiments import ExperimentSpec, run_spec
+    spec = ExperimentSpec(name="t", models=("resnet50",), n_servers=(2,),
+                          bandwidth_gbps=(10.0,),
+                          scheduler=("fifo", "priority"), sched_chunks=8,
+                          fault_model=("none", "slowdown:2"),
+                          churn_rate=(0.0, 1.0), worker_bw_skew=(0.0, 0.5),
+                          fault_seed=31)
+    serial = run_spec(spec, executor="serial")
+    other = run_spec(spec, executor=executor)
+    assert serial["cells"] == other["cells"]
+    assert serial["spec_hash"] == other["spec_hash"]
+
+
+def test_churn_grid_registered_and_gated():
+    from repro.experiments import GRIDS, grids
+    from repro.experiments.validations import VALIDATORS
+    spec = GRIDS["churn"]
+    assert spec.name in VALIDATORS, "gated grid must carry claim checks"
+    assert grids.resolve("churn")[0] is spec
+    assert "priority" in spec.scheduler and 2 in spec.n_rails
+    assert "slowdown:5" in spec.fault_model
+    assert max(spec.churn_rate) > 0 and max(spec.worker_bw_skew) > 0
+    assert spec.fault_seed != 0        # seed is pinned, not implicit
+
+
+# ---------------------------------------------------------------------------
+# launcher runtime parity (satellite: scheduler through train.py)
+# ---------------------------------------------------------------------------
+
+def test_train_dryrun_wires_scheduler_into_comm_plan():
+    from repro.launch import train as train_mod
+    fifo = train_mod.main(["--arch", "stablelm-3b", "--smoke", "--dryrun",
+                           "--fusion-mb", "1"])
+    pri = train_mod.main(["--arch", "stablelm-3b", "--smoke", "--dryrun",
+                          "--fusion-mb", "1", "--scheduler", "priority",
+                          "--sched-chunks", "8"])
+    assert fifo["dryrun"] and fifo["scheduler"] == "fifo"
+    assert pri["scheduler"] == "priority" and pri["sched_chunks"] == 8
+    assert fifo["n_buckets"] == pri["n_buckets"] > 1
+    # same buckets, different issue order: the IR order the simulator
+    # prices is what the runtime would execute
+    assert sorted(pri["bucket_order"]) == sorted(fifo["bucket_order"])
+    assert fifo["bucket_order"] == sorted(fifo["bucket_order"])
+    assert pri["bucket_order"] != fifo["bucket_order"]
