@@ -192,6 +192,16 @@ class FlowSpec(NamedTuple):
       layer (:mod:`repro.core.faults`): a :class:`ChurnEvent` dropping
       worker ``w`` cancels the job's pending flows with ``worker == w``.
       Ignored unless the engine runs with churn events.
+    - ``path``, when non-empty, is the tuple of link ids the flow
+      traverses (host NIC -> ToR uplink -> ...); the flow progresses at
+      its bottleneck **max-min fair share** across all of them
+      (progressive filling — see :meth:`NetworkEngine._run_maxmin`).  A
+      link id repeated ``m`` times encodes demand multiplicity: the flow
+      consumes ``m`` units of that link's capacity per unit of rate (a
+      rack uplink crossed by every host of the rack).  An empty path
+      means "use ``link``" — today's single-resource semantics, and a
+      one-element path is normalized to exactly that, so any plan whose
+      paths all have length <= 1 runs the original engine bit-for-bit.
     """
 
     op_id: int
@@ -205,6 +215,7 @@ class FlowSpec(NamedTuple):
     duration: Optional[float] = None  # precomputed work+latency (hold flows)
     rail: int = 0                    # which rail of a multi-rail link
     worker: int = 0                  # owning worker (fault attribution)
+    path: Tuple[str, ...] = ()       # multi-link route (empty: use ``link``)
 
 
 class FlowResult(NamedTuple):
@@ -339,7 +350,17 @@ class FlowBatch(NamedTuple):
     order (and therefore every same-time tie-break) exactly.
 
     Batches are immutable in the NamedTuple sense; ``relabel`` and
-    :func:`perturb_batch` share every column they do not change.
+    :func:`perturb_batch` share every column they do not change (except
+    the path CSR columns, which ``relabel`` deep-copies — a relabeled
+    job's route must be independently mutable without leaking into the
+    source batch).
+
+    Multi-link routes are stored CSR-style: flow ``i`` traverses the
+    link codes ``path_link[path_off[i]:path_off[i+1]]`` (codes into
+    ``links``, repeats = demand multiplicity, exactly mirroring
+    ``FlowSpec.path``).  Both columns are ``None`` when no flow in the
+    batch has a path — the common case, and the representation every
+    pre-fabric constructor produces.
     """
 
     op_id: np.ndarray
@@ -355,6 +376,8 @@ class FlowBatch(NamedTuple):
     link: np.ndarray                 # intp codes into ``links``
     rail: np.ndarray                 # intp
     worker: np.ndarray               # intp (fault attribution)
+    path_off: Optional[np.ndarray] = None   # CSR offsets (n+1) into path_link
+    path_link: Optional[np.ndarray] = None  # intp codes into ``links``
 
     @property
     def n(self) -> int:
@@ -366,9 +389,32 @@ class FlowBatch(NamedTuple):
         if not flows:
             return _EMPTY_BATCH
         (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
-         du_col, rl_col, w_col) = zip(*flows)
+         du_col, rl_col, w_col, pth_col) = zip(*flows)
         jobs, jcode = _intern(job_col)
-        links, lcode = _intern(lk_col)
+        if any(pth_col):
+            # Intern link names and path entries together, still in
+            # first-appearance order along the batch (flow i contributes
+            # its ``link`` then its path entries).
+            table: Dict[str, int] = {}
+            lcode = np.empty(len(flows), dtype=np.intp)
+            plinks: List[int] = []
+            path_off = np.zeros(len(flows) + 1, dtype=np.intp)
+            for i, (nm, p) in enumerate(zip(lk_col, pth_col)):
+                c = table.get(nm)
+                if c is None:
+                    c = table[nm] = len(table)
+                lcode[i] = c
+                for pn in p:
+                    pc = table.get(pn)
+                    if pc is None:
+                        pc = table[pn] = len(table)
+                    plinks.append(pc)
+                path_off[i + 1] = len(plinks)
+            links = tuple(table)
+            path_link: Optional[np.ndarray] = np.asarray(plinks, dtype=np.intp)
+        else:
+            links, lcode = _intern(lk_col)
+            path_off = path_link = None
         return cls(
             op_id=np.asarray(op_col, dtype=np.intp),
             ready=np.asarray(rdy_col, dtype=np.float64),
@@ -379,19 +425,27 @@ class FlowBatch(NamedTuple):
             hold=np.asarray(hd_col, dtype=bool),
             jobs=jobs, job=jcode, links=links, link=lcode,
             rail=np.asarray(rl_col, dtype=np.intp),
-            worker=np.asarray(w_col, dtype=np.intp))
+            worker=np.asarray(w_col, dtype=np.intp),
+            path_off=path_off, path_link=path_link)
 
     def to_flows(self) -> List[FlowSpec]:
         """Materialize the tuple view (NaN durations become ``None``)."""
         jobs, links = self.jobs, self.links
         du = [None if d != d else d for d in self.duration.tolist()]
+        if self.path_link is not None and self.path_link.shape[0]:
+            off = self.path_off.tolist()
+            pl = [links[c] for c in self.path_link.tolist()]
+            paths: List[Tuple[str, ...]] = [
+                tuple(pl[off[i]:off[i + 1]]) for i in range(self.n)]
+        else:
+            paths = [()] * self.n
         rows = zip(self.op_id.tolist(), self.ready.tolist(),
                    self.work.tolist(), self.latency.tolist(),
                    self.priority.tolist(),
                    [jobs[c] for c in self.job.tolist()],
                    [links[c] for c in self.link.tolist()],
                    self.hold.tolist(), du, self.rail.tolist(),
-                   self.worker.tolist())
+                   self.worker.tolist(), paths)
         new = tuple.__new__
         return [new(FlowSpec, row) for row in rows]
 
@@ -411,7 +465,37 @@ class FlowBatch(NamedTuple):
         shift = len(old_job)
         jobs = tuple(job + nm[shift:] if nm.startswith(old_job) else nm
                      for nm in self.jobs)
-        return self._replace(op_id=self.op_id + op_id_base, jobs=jobs)
+        # Copy the path CSR columns rather than aliasing them: relabeled
+        # batches model *other* jobs, and an in-place route edit on the
+        # clone (re-homing a job to a different uplink) must never leak
+        # into the source batch the way a shared ``ready`` column would.
+        path_off = None if self.path_off is None else self.path_off.copy()
+        path_link = None if self.path_link is None else self.path_link.copy()
+        return self._replace(op_id=self.op_id + op_id_base, jobs=jobs,
+                             path_off=path_off, path_link=path_link)
+
+    def with_path(self, path: Tuple[str, ...]) -> "FlowBatch":
+        """Stamp one shared multi-link route on every flow of the batch.
+
+        Extends the interned ``links`` table with any new names (appended
+        after the existing entries, preserving first-appearance order for
+        the single-link columns) and builds the uniform CSR columns.  An
+        empty ``path`` clears the route columns instead.
+        """
+        if not path:
+            return self._replace(path_off=None, path_link=None)
+        table = {nm: k for k, nm in enumerate(self.links)}
+        codes = []
+        for nm in path:
+            c = table.get(nm)
+            if c is None:
+                c = table[nm] = len(table)
+            codes.append(c)
+        k = len(path)
+        path_off = np.arange(0, (self.n + 1) * k, k, dtype=np.intp)
+        path_link = np.tile(np.asarray(codes, dtype=np.intp), self.n)
+        return self._replace(links=tuple(table), path_off=path_off,
+                             path_link=path_link)
 
 
 _EMPTY_BATCH = FlowBatch(
@@ -467,6 +551,10 @@ def concat_batches(batches: Iterable[FlowBatch]) -> FlowBatch:
     link_table: Dict[str, int] = {}
     job_cols = []
     link_cols = []
+    path_cols = []
+    off_cols = []
+    off_base = 0
+    has_paths = False
     for b in bs:
         jl = np.empty(len(b.jobs), dtype=np.intp)
         for k, nm in enumerate(b.jobs):
@@ -482,6 +570,20 @@ def concat_batches(batches: Iterable[FlowBatch]) -> FlowBatch:
                 c = link_table[nm] = len(link_table)
             ll[k] = c
         link_cols.append(ll[b.link] if len(b.links) else b.link)
+        if b.path_link is not None and b.path_link.shape[0]:
+            has_paths = True
+            path_cols.append(ll[b.path_link])
+            off_cols.append(b.path_off[1:] + off_base)
+            off_base += int(b.path_off[-1])
+        else:
+            path_cols.append(np.zeros(0, dtype=np.intp))
+            off_cols.append(np.full(b.n, off_base, dtype=np.intp))
+    if has_paths:
+        path_off = np.concatenate(
+            [np.zeros(1, dtype=np.intp)] + off_cols)
+        path_link = np.concatenate(path_cols)
+    else:
+        path_off = path_link = None
     return FlowBatch(
         op_id=np.concatenate([b.op_id for b in bs]),
         ready=np.concatenate([b.ready for b in bs]),
@@ -493,7 +595,8 @@ def concat_batches(batches: Iterable[FlowBatch]) -> FlowBatch:
         jobs=tuple(job_table), job=np.concatenate(job_cols),
         links=tuple(link_table), link=np.concatenate(link_cols),
         rail=np.concatenate([b.rail for b in bs]),
-        worker=np.concatenate([b.worker for b in bs]))
+        worker=np.concatenate([b.worker for b in bs]),
+        path_off=path_off, path_link=path_link)
 
 
 def perturb_batch(batch: FlowBatch, jitter: float, seed: int,
@@ -558,6 +661,71 @@ def serialized_chain(ready: np.ndarray, dur: np.ndarray
             return starts, ends
         cand[bad] = False
     raise AssertionError("closed-form chain decomposition did not converge")
+
+
+def maxmin_rates(demands: Sequence[Dict[str, float]],
+                 capacities: Dict[str, float]) -> List[float]:
+    """Bottleneck max-min fair rates by progressive filling.
+
+    ``demands[i]`` maps link id -> multiplicity for flow ``i`` (a flow at
+    rate ``r`` consumes ``m * r`` of a link it crosses with multiplicity
+    ``m``); links absent from ``capacities`` have capacity 1.0.  The fill
+    level rises uniformly for all unfrozen flows until some link
+    saturates — link ``l`` with residual capacity ``c_l`` and unfrozen
+    demand ``d_l`` saturates at level ``c_l / d_l`` — then the flows
+    crossing the tightest link freeze at that level, their consumption is
+    subtracted, and the process repeats.  Per-flow rates are capped at
+    1.0 (full NIC-relative rate), matching the single-link engine's
+    ``share = min(1, cap / n)``; the allocation this produces is the
+    unique max-min fair point, so any correct solver agrees with it to
+    rounding error (the contract behind ``tests/_reference_fabric.py``).
+
+    Links co-saturating within a relative ``1e-12`` of the minimum level
+    freeze in the same round: the residual updates are floating-point
+    subtractions, and a tie partner left behind with a tiny negative
+    residual would otherwise produce a bogus near-zero level (and a flow
+    frozen at rate ~0) on the next round.
+    """
+    n = len(demands)
+    rates = [0.0] * n
+    un = list(range(n))
+    residual: Dict[str, float] = {}
+    load: Dict[str, float] = {}
+    for i in un:
+        for nm, m in demands[i].items():
+            if nm not in residual:
+                residual[nm] = float(capacities.get(nm, 1.0))
+                load[nm] = 0.0
+            load[nm] += m
+    while un:
+        phi = None
+        for nm, ld in load.items():
+            if ld <= 0.0:
+                continue
+            lvl = residual[nm] / ld
+            if phi is None or lvl < phi:
+                phi = lvl
+        if phi is None or phi >= 1.0:
+            for i in un:
+                rates[i] = 1.0       # per-flow full-rate cap
+            return rates
+        if phi < 0.0:
+            phi = 0.0
+        cut = phi * (1.0 + 1e-12) + 1e-18
+        tight = {nm for nm, ld in load.items()
+                 if ld > 0.0 and residual[nm] / ld <= cut}
+        nxt = []
+        for i in un:
+            d = demands[i]
+            if tight.isdisjoint(d):
+                nxt.append(i)
+                continue
+            rates[i] = phi
+            for nm, m in d.items():
+                residual[nm] -= m * phi
+                load[nm] -= m
+        un = nxt
+    return rates
 
 
 class _Link:
@@ -706,9 +874,23 @@ class NetworkEngine:
         share one large-plan code path (and its bit-identity proofs).
         ``churn`` events force the batch core regardless of size (the
         membership-change handler lives only there).
+
+        Flows carrying a multi-link ``path`` dispatch to the max-min
+        event loop (:meth:`_run_maxmin`); single-element paths normalize
+        into ``link`` first, so any plan whose paths all have length
+        <= 1 runs the original single-resource engine bit-for-bit.
         """
         if not flows:
             return []
+        plen = 0
+        for f in flows:
+            if len(f.path) > plen:
+                plen = len(f.path)
+        if plen > 1:
+            return self._run_maxmin(flows, churn)
+        if plen:
+            flows = [f._replace(link=f.path[0], path=()) if f.path else f
+                     for f in flows]
         if len(flows) < _SMALL_PLAN_MAX_FLOWS and not churn:
             return self._run_small(flows)
         return self.run_batch(FlowBatch.from_flows(flows),
@@ -727,7 +909,7 @@ class NetworkEngine:
         caps = self.capacities
 
         (op_col, rdy_col, wk_col, lt_col, pr_col, job_col, lk_col, hd_col,
-         _du_col, rl_col, _w_col) = zip(*flows)
+         _du_col, rl_col, _w_col, _pth_col) = zip(*flows)
 
         rail_counts = self.rails
         if rail_counts and any(rail_counts.get(nm, 1) > 1
@@ -997,6 +1179,240 @@ class NetworkEngine:
         new = tuple.__new__
         return [new(FlowResult, row) for row in rows]
 
+    def _run_maxmin(self, flows: Sequence[FlowSpec],
+                    churn: Optional[Sequence[ChurnEvent]] = None
+                    ) -> List[FlowResult]:
+        """Multi-resource event loop: bottleneck max-min fair shares.
+
+        Flows whose ``path`` spans several links progress at the rate
+        progressive filling assigns them (:func:`maxmin_rates`), and the
+        piecewise-constant rate vector is re-derived at every
+        path-membership change — admission, completion, churn teardown —
+        which is exactly the set of instants where it can change.  Between
+        change-points each active flow's remaining work drains linearly at
+        its rate, and the next completion is the minimum projection
+        ``t + remaining / rate``.
+
+        Job semantics are the single-resource engine's, verbatim: one
+        in-flight flow per job in (priority, op_id) service order, ready
+        gating, ``hold``/``latency``/``duration`` completion bookkeeping,
+        and the closed-form ``start + work`` wire time for flows that were
+        never contended.  A flow is contended when it ever shared a link
+        with another active flow or could not run at full rate alone
+        (some link's capacity is below the flow's own demand on it).
+
+        Churn tears down the in-flight flow on **every** link of its path
+        at once — the active set is the only link state, so removal frees
+        its share on all of them for the next rate solve — then cancels a
+        dropped worker's pending flows and applies the re-bucketing stall,
+        mirroring the single-resource ``_apply_fault``.
+
+        The loop is O(events x active x path): fabric cells keep at most
+        one flow per job in flight, so the rate solve spans the handful of
+        co-scheduled jobs, not the plan size.
+        """
+        caps = self.capacities
+        n_total = len(flows)
+        if self.rails and any(v > 1 for v in self.rails.values()):
+            raise ValueError("multi-link paths and multi-rail links are "
+                             "mutually exclusive on one engine")
+
+        # per-flow demand: link -> multiplicity (repeats in ``path``)
+        demand: List[Dict[str, float]] = []
+        for f in flows:
+            d: Dict[str, float] = {}
+            for nm in (f.path or (f.link,)):
+                d[nm] = d.get(nm, 0.0) + 1.0
+            demand.append(d)
+        link_cap: Dict[str, float] = {}
+        for d in demand:
+            for nm in d:
+                if nm not in link_cap:
+                    link_cap[nm] = float(caps.get(nm, 1.0))
+
+        by_job: Dict[str, List[int]] = {}
+        for i, f in enumerate(flows):
+            by_job.setdefault(f.job, []).append(i)
+        for q in by_job.values():
+            # service order (priority, op_id); best last for cheap picks
+            q.sort(key=lambda k: (flows[k].priority, flows[k].op_id),
+                   reverse=True)
+        job_free: Dict[str, float] = {j: 0.0 for j in by_job}
+        active: Dict[str, int] = {}          # job -> in-flight flow index
+
+        start = [0.0] * n_total
+        wire = [0.0] * n_total
+        end = [0.0] * n_total
+        contended = [False] * n_total
+        remaining = [0.0] * n_total
+        rate = [0.0] * n_total
+        n_done = 0
+
+        events = sorted(churn or [],
+                        key=lambda fe: fe.t if fe.t > 0.0 else 0.0)
+        ep = 0
+        t = 0.0
+        guard = 0
+        guard_max = _STALL_FACTOR * (n_total + len(events)) * 4 + _STALL_BASE
+
+        def _pick(job: str) -> int:
+            q = by_job[job]
+            for k in range(len(q) - 1, -1, -1):  # sorted reverse: best last
+                if flows[q[k]].ready <= t:
+                    return q.pop(k)
+            return -1
+
+        def _rates() -> None:
+            ids = list(active.values())
+            rs = maxmin_rates([demand[i] for i in ids], link_cap)
+            for k, i in enumerate(ids):
+                rate[i] = rs[k]
+
+        def _apply_churn(fe: ChurnEvent, tf: float) -> None:
+            nonlocal n_done, guard
+            pref = fe.job + "@"
+            for j in by_job:
+                if j != fe.job and not j.startswith(pref):
+                    continue
+                guard = 0
+                # (a) the in-flight transfer is torn down by the membership
+                # change on every link of its path and restarts from
+                # scratch after the stall: push it back into the queue
+                i = active.pop(j, None)
+                if i is not None:
+                    contended[i] = False  # readmission re-derives contention
+                    q = by_job[j]
+                    q.append(i)
+                    q.sort(key=lambda k: (flows[k].priority,
+                                          flows[k].op_id), reverse=True)
+                # (b) dropout: the re-formed collective skips the dead
+                # worker's buckets — its pending flows complete trivially
+                if fe.kind == "drop" and fe.worker >= 0:
+                    q = by_job[j]
+                    dead = [k for k in q
+                            if flows[k].worker == fe.worker]
+                    if dead:
+                        by_job[j] = [k for k in q
+                                     if flows[k].worker != fe.worker]
+                        for k in dead:
+                            start[k] = tf
+                            wire[k] = tf
+                            end[k] = tf
+                            contended[k] = False
+                            n_done += 1
+                # (c) the priced re-bucketing stall gates the next admission
+                if fe.stall > 0.0:
+                    ft = tf + fe.stall
+                    if ft > job_free[j]:
+                        job_free[j] = ft
+
+        while n_done < n_total:
+            guard += 1
+            if guard > guard_max:
+                raise RuntimeError(
+                    "max-min engine made no progress "
+                    f"({n_done}/{n_total} flows done)")
+
+            # -- admissions at the current time ----------------------------
+            admitted = False
+            for j, q in by_job.items():
+                if j in active or job_free[j] > t or not q:
+                    continue
+                i = _pick(j)
+                if i < 0:
+                    continue
+                start[i] = t
+                remaining[i] = flows[i].work
+                d = demand[i]
+                if any(link_cap[nm] < m for nm, m in d.items()):
+                    # some link cannot carry even this flow alone at full
+                    # rate: the closed-form completion is invalid
+                    contended[i] = True
+                for oi in active.values():
+                    od = demand[oi]
+                    shared = any(nm in od for nm in d)
+                    if shared:
+                        contended[oi] = True
+                        contended[i] = True
+                active[j] = i
+                admitted = True
+            if admitted:
+                guard = 0
+                continue            # membership changed; recompute rates
+
+            _rates()
+
+            # -- next event: completion, admission trigger, or churn -------
+            t_next = None
+            for i in active.values():
+                if rate[i] > 0.0:
+                    proj = t + remaining[i] / rate[i]
+                    if t_next is None or proj < t_next:
+                        t_next = proj
+            for j, q in by_job.items():
+                if j in active or not q:
+                    continue
+                earliest = min(flows[k].ready for k in q)
+                trigger = max(job_free[j], earliest)
+                if t_next is None or trigger < t_next:
+                    t_next = trigger
+            if ep < len(events):
+                ft = events[ep].t
+                if ft < 0.0:
+                    ft = 0.0
+                if t_next is None or ft < t_next:
+                    t_next = ft
+            if t_next is None:
+                raise RuntimeError(
+                    "max-min engine stalled with pending flows")
+            if t_next < t:
+                t_next = t
+
+            # -- advance every active wire at its current rate -------------
+            dt = t_next - t
+            completions: List[Tuple[str, int]] = []
+            for j, i in active.items():
+                r = rate[i]
+                remaining[i] -= dt * r
+                # done when the residual is negligible — or too small to
+                # advance the clock at all (absorbed below ulp(t_next))
+                if r > 0.0 and (
+                        remaining[i] <= flows[i].work * 1e-12 + 1e-18
+                        or t_next + remaining[i] / r <= t_next):
+                    completions.append((j, i))
+            t = t_next
+
+            for j, i in completions:
+                f = flows[i]
+                if not contended[i]:
+                    w = start[i] + f.work  # exact: rate was 1.0 throughout
+                    if f.hold and f.duration is not None:
+                        e = start[i] + f.duration
+                    else:
+                        e = w + f.latency
+                else:
+                    w = t
+                    e = w + f.latency
+                wire[i] = w
+                end[i] = e
+                job_free[j] = e if f.hold else w
+                del active[j]
+                n_done += 1
+                guard = 0
+
+            # -- churn due now fires after same-time completions, before
+            # the next round of admissions (the _DONE < _FAULT < _ADMIT
+            # calendar order of the single-resource core) ------------------
+            while ep < len(events) and (
+                    events[ep].t if events[ep].t > 0.0 else 0.0) <= t:
+                _apply_churn(events[ep], t)
+                ep += 1
+
+        rows = zip([f.op_id for f in flows], [f.job for f in flows],
+                   start, wire, end, contended)
+        new = tuple.__new__
+        return [new(FlowResult, row) for row in rows]
+
     def run_batch(self, batch: FlowBatch,
                   churn: Optional[Sequence[ChurnEvent]] = None
                   ) -> ResultBatch:
@@ -1023,6 +1439,23 @@ class NetworkEngine:
             return ResultBatch(batch.op_id, batch.jobs, batch.job,
                                z, np.zeros(0), np.zeros(0),
                                np.zeros(0, dtype=bool))
+        if batch.path_link is not None and batch.path_link.shape[0]:
+            plens = np.diff(batch.path_off)
+            if plens.max() > 1:
+                res = self._run_maxmin(batch.to_flows(), churn)
+                return ResultBatch(
+                    batch.op_id, batch.jobs, batch.job,
+                    np.array([r.start for r in res]),
+                    np.array([r.wire_end for r in res]),
+                    np.array([r.end for r in res]),
+                    np.array([r.contended for r in res], dtype=bool))
+            # every path has length <= 1: normalize one-element paths into
+            # the ``link`` column and run the single-resource engine —
+            # bit-identical by construction (it only ever reads ``link``)
+            m = plens > 0
+            link = batch.link.copy()
+            link[m] = batch.path_link[batch.path_off[:-1][m]]
+            batch = batch._replace(link=link, path_off=None, path_link=None)
         if n_total < _SMALL_PLAN_MAX_FLOWS and not churn:
             res = self._run_small(batch.to_flows())
             return ResultBatch(

@@ -17,7 +17,11 @@ three ways a fleet misbehaves, all seeded and deterministic:
   re-bucketing stall) and cancels the dead worker's pending flows (the
   re-formed collective skips its buckets this iteration); a rejoin costs
   another stall.  Arrival counts are Poisson in ``churn_rate`` (expected
-  membership changes per iteration), times uniform over the iteration;
+  membership changes per iteration), times uniform over the iteration.
+  Under a fabric lowering (multi-link :attr:`FlowSpec.path`), the
+  teardown releases the flow's share on *every* link of its path at
+  once — the max-min rate vector is re-solved without it, so survivors
+  speed up on the freed uplink immediately;
 - **asymmetric bandwidth** — each worker's effective link rate is scaled
   by ``1 + bw_skew * Exp(1)``, so its flows carry proportionally more
   wire work (a factor of 1 everywhere at ``bw_skew=0``).

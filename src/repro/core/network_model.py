@@ -189,6 +189,64 @@ class HierarchicalAllReduce:
 
 
 @dataclass(frozen=True)
+class TreeAllReduce:
+    """Binomial-tree all-reduce: reduce up the tree, broadcast back down.
+
+    ``ceil(log2 N)`` sequential reduce steps each move the full S bytes
+    over one link and add full-size vectors at the receiving node, then
+    the same number of broadcast steps move S back — wire time
+    ``2 * ceil(log2 N) * S / bw`` and ``ceil(log2 N)`` full-size adds.
+    Latency-optimal but bandwidth-poor versus the ring's ``2S(N-1)/N``
+    (the classical trade-off); it earns its place on the fabric axis
+    because its edges cross racks just like the ring's, so it pays the
+    same oversubscription penalty from a worse baseline.
+    """
+
+    n: int
+    bw: float
+    addest: AddEst
+    compression_ratio: float = 1.0   # free §3.2 divisor, transmission only
+
+    @property
+    def _steps(self) -> int:
+        return int(math.ceil(math.log2(self.n))) if self.n > 1 else 0
+
+    def time(self, size: int) -> float:
+        if self.n <= 1:
+            return 0.0
+        steps = self._steps
+        t = (2.0 * steps * size / self.bw) / self.compression_ratio
+        return t + steps * self.addest(size)
+
+    def wire_time(self, size: int) -> float:
+        if self.n <= 1:
+            return 0.0
+        return (2.0 * self._steps * size / self.bw) / self.compression_ratio
+
+    def time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`time`, bit-identical per element."""
+        if self.n <= 1:
+            return np.zeros_like(sizes)
+        steps = self._steps
+        t = (2.0 * steps * sizes / self.bw) / self.compression_ratio
+        return t + steps * self.addest.batch(sizes)
+
+    def wire_time_v(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`wire_time`, bit-identical per element."""
+        if self.n <= 1:
+            return np.zeros_like(sizes)
+        return (2.0 * self._steps * sizes / self.bw) / self.compression_ratio
+
+    def wire_bytes(self, size: int) -> float:
+        """Bytes a tree node moves: S up (reduce) + S down (broadcast),
+        once per level it participates in; the root-adjacent links carry
+        the full ``2 * steps * S`` stream that bounds the wire time."""
+        if self.n <= 1:
+            return 0.0
+        return 2.0 * self._steps * size / max(self.compression_ratio, 1e-9)
+
+
+@dataclass(frozen=True)
 class SwitchMLAllReduce:
     """Paper §4 what-if: in-network aggregation (SwitchML).
 
@@ -285,6 +343,8 @@ def make_cost_model(n: int, bw: float, addest: AddEst, *,
                     compress_reduction: bool = False):
     if topology == "ring":
         return RingAllReduce(n, bw, addest, compression_ratio, compress_reduction)
+    if topology == "tree":
+        return TreeAllReduce(n, bw, addest, compression_ratio)
     if topology == "hierarchical":
         return HierarchicalAllReduce(n // n_pods, n_pods, bw,
                                      dcn_bw or bw / 2, addest,

@@ -631,5 +631,5 @@ def clone_flows(flows: Sequence[FlowSpec], op_id_base: int, job: str, *,
             nm = job + f[5][shift:] if f[5].startswith(old_job) else f[5]
             names[f[5]] = nm
         out.append(new(FlowSpec, (f[0] + op_id_base, f[1], f[2], f[3], f[4],
-                                  nm, f[6], f[7], f[8], f[9], f[10])))
+                                  nm, f[6], f[7], f[8], f[9], f[10], f[11])))
     return out

@@ -53,6 +53,7 @@ from repro.core.events import (DEFAULT_LINK, FlowBatch, FlowResult, FlowSpec,
                                ResultBatch, concat_batches, perturb_batch,
                                perturb_flows, run_flow_batch, run_flows,
                                serialized_chain)
+from repro.core.fabric import resolve_fabric
 from repro.core.faults import (FaultModel, apply_faults_batch,
                                apply_faults_flows, churn_events,
                                parse_fault_model, worker_codes)
@@ -347,7 +348,9 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 stream: int = 0,
                 codecs: Optional[dict] = None,
                 fault: Optional[FaultModel] = None,
-                fault_seed: int = 0, n_workers: int = 1
+                fault_seed: int = 0, n_workers: int = 1,
+                path: Tuple[str, ...] = (),
+                capacities: Optional[dict] = None
                 ) -> Tuple[List[Bucket], float, float]:
     """Map per-op flow results back to per-bucket (start, end) + busy time.
 
@@ -370,7 +373,15 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
     :meth:`~repro.core.events.NetworkEngine.run_batch`, no tuple
     materialization); ``REPRO_SIM_FASTPATH=0`` disables that dispatch and
     the fifo closed form together.
+
+    ``path``/``capacities`` lower the plan onto a fabric route (see
+    :mod:`repro.core.fabric`): a multi-link ``path`` is stamped on every
+    flow after jitter and faults, routing the run to the engine's
+    max-min core with the fabric's link capacities.  A path of length
+    <= 1 stamps nothing — the fabric elided its uplink — leaving every
+    branch byte-identical to the flat topology.
     """
+    fabric_path = path if len(path) > 1 else ()
     if results is None:
         if _fastpath_enabled() and len(plan.ops) >= _ev._SMALL_PLAN_MAX_FLOWS:
             batch = plan_to_flow_batch(plan, cost, tr.per_tensor_overhead,
@@ -387,10 +398,15 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                     fault, n_workers,
                     _fault_horizon(batch.ready, batch.work, batch.latency),
                     fault_seed, stream, job=job) or None
-            rb = None if churn else _fifo_fast_batch(plan, batch)
-            if rb is None:
-                rb = run_flow_batch(batch, rails={DEFAULT_LINK: n_rails}
-                                    if n_rails > 1 else None, churn=churn)
+            if fabric_path:
+                batch = batch.with_path(fabric_path)
+                rb = run_flow_batch(batch, capacities=capacities,
+                                    churn=churn)
+            else:
+                rb = None if churn else _fifo_fast_batch(plan, batch)
+                if rb is None:
+                    rb = run_flow_batch(batch, rails={DEFAULT_LINK: n_rails}
+                                        if n_rails > 1 else None, churn=churn)
             return _serve_from_batch(plan, buckets, rb)
         flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job,
                               n_rails=n_rails, codecs=codecs)
@@ -407,7 +423,10 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                                np.array([f.work for f in flows]),
                                np.array([f.latency for f in flows])),
                 fault_seed, stream, job=job) or None
-        if _fastpath_enabled() and churn is None:
+        if fabric_path:
+            flows = [f._replace(path=fabric_path) for f in flows]
+            results = run_flows(flows, capacities=capacities, churn=churn)
+        if results is None and _fastpath_enabled() and churn is None:
             results = _fifo_fast_results(plan, flows)
         if results is None:
             results = run_flows(flows, rails={DEFAULT_LINK: n_rails}
@@ -441,7 +460,9 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
              jitter: float = 0.0, jitter_seed: int = 0,
              codec: str = "none", error_feedback: bool = False,
              fault_model: str = "none", churn_rate: float = 0.0,
-             worker_bw_skew: float = 0.0, fault_seed: int = 0) -> SimResult:
+             worker_bw_skew: float = 0.0, fault_seed: int = 0,
+             fabric: str = "none",
+             oversubscription: float = 1.0) -> SimResult:
     """Run the two-process simulation for one iteration.
 
     ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
@@ -473,6 +494,13 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     asymmetric per-worker bandwidth.  All at their defaults resolve to a
     null model that bypasses the fault layer entirely — bit-identical to
     the pre-fault engine.
+
+    ``fabric`` (``"none"`` | ``"clos"``) with ``oversubscription`` lowers
+    the collective onto a datacenter fabric (:mod:`repro.core.fabric`):
+    flows traverse NIC -> ToR-uplink paths and the engine prices them at
+    the bottleneck max-min fair share.  ``fabric="none"`` — and any
+    fabric whose uplink can never bind, e.g. ``clos`` at 1:1 — is
+    *bitwise* identical to the flat single-link topology.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -487,6 +515,13 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     fm = parse_fault_model(fault_model, churn_rate=churn_rate,
                            bw_skew=worker_bw_skew)
     fault = None if fm.is_null else fm
+    fab = resolve_fabric(fabric, oversubscription)
+    fpath = fab.path(topology) if fab is not None else ()
+    fcaps = fab.capacities() if fab is not None else None
+    if len(fpath) > 1 and n_rails > 1:
+        raise ValueError("fabric paths and multi-rail links are mutually "
+                         "exclusive (rails split the NIC, the fabric the "
+                         "spine)")
 
     def _cost(ratio: float):
         return make_cost_model(
@@ -512,7 +547,8 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
                                        jitter_seed=jitter_seed,
                                        codecs=codecs, fault=fault,
                                        fault_seed=fault_seed,
-                                       n_workers=n_workers)
+                                       n_workers=n_workers,
+                                       path=fpath, capacities=fcaps)
 
     if not served:
         t_sync = timeline.t_back
@@ -555,7 +591,9 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                         error_feedback: bool = False,
                         fault_model: str = "none", churn_rate: float = 0.0,
                         worker_bw_skew: float = 0.0,
-                        fault_seed: int = 0) -> List[SimResult]:
+                        fault_seed: int = 0,
+                        fabric: str = "none",
+                        oversubscription: float = 1.0) -> List[SimResult]:
     """Multiple jobs sharing one physical link (fair-share contention).
 
     Each timeline is an independent training job running the same ring
@@ -575,6 +613,12 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     see :func:`simulate`) apply per job on the jitter streams' numbering
     (job ``j`` draws from fault stream ``j``), and churn events carry the
     job's name so a dropout only tears down its own fleet.
+
+    ``fabric``/``oversubscription`` (see :func:`simulate`) put every job
+    on the same NIC -> ToR-uplink route: co-located jobs striped over the
+    same racks contend for the uplink too, and the engine's max-min solve
+    arbitrates both links at once.  ``fabric="none"`` and the elided 1:1
+    case stay bitwise identical to the flat shared link.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -589,6 +633,15 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     fm = parse_fault_model(fault_model, churn_rate=churn_rate,
                            bw_skew=worker_bw_skew)
     fault = None if fm.is_null else fm
+    fab = resolve_fabric(fabric, oversubscription)
+    fpath = fab.path("ring") if fab is not None else ()
+    if len(fpath) <= 1:
+        fpath = ()
+    fcaps = fab.capacities() if fab is not None and fpath else None
+    if fpath and n_rails > 1:
+        raise ValueError("fabric paths and multi-rail links are mutually "
+                         "exclusive (rails split the NIC, the fabric the "
+                         "spine)")
     cost = RingAllReduce(n_workers, eff_bw, addest,
                          resolved.wire_ratio if free else 1.0)
     codec_cost = None if free else RingAllReduce(n_workers, eff_bw, addest,
@@ -651,8 +704,13 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             base += bj.n
             counts.append(bj.n)
             parts.append(bj)
-        rb = run_flow_batch(concat_batches(parts), rails=rails,
-                            churn=churn_all or None)
+        cell = concat_batches(parts)
+        if fpath:
+            rb = run_flow_batch(cell.with_path(fpath), capacities=fcaps,
+                                churn=churn_all or None)
+        else:
+            rb = run_flow_batch(cell, rails=rails,
+                                churn=churn_all or None)
     else:
         all_flows: List[FlowSpec] = []
         for j, got in enumerate(meta):
@@ -677,8 +735,13 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             base += len(flows)
             counts.append(len(flows))
             all_flows.extend(flows)
-        results = run_flows(all_flows, rails=rails,
-                            churn=churn_all or None)
+        if fpath:
+            all_flows = [f._replace(path=fpath) for f in all_flows]
+            results = run_flows(all_flows, capacities=fcaps,
+                                churn=churn_all or None)
+        else:
+            results = run_flows(all_flows, rails=rails,
+                                churn=churn_all or None)
 
     out: List[SimResult] = []
     pos = 0

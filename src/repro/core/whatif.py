@@ -65,12 +65,13 @@ def _cells(spec) -> Dict[tuple, Dict]:
 
 def _k(model, servers, bw, transport, ratio=1.0, topo="ring", sched="fifo",
        n_jobs=1, n_rails=1, jitter_ms=0.0, codec="none", fault_model="none",
-       churn_rate=0.0, worker_bw_skew=0.0):
+       churn_rate=0.0, worker_bw_skew=0.0, fabric="none",
+       oversubscription=1.0):
     """An ``index_cells`` key in CELL_AXES order, with trailing-axis
     defaults — figure builders only name the axes their sweep varies."""
     return (model, servers, bw, transport, ratio, topo, sched, n_jobs,
             n_rails, jitter_ms, codec, fault_model, churn_rate,
-            worker_bw_skew)
+            worker_bw_skew, fabric, oversubscription)
 
 def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
                             servers: Optional[Sequence[int]] = None,
@@ -420,6 +421,47 @@ def fig14_unreliable_workers(models: Optional[Sequence[str]] = None,
                     row["nines_needed"] = k
                     break
             out.append(row)
+    return out
+
+
+def fig15_fabric_oversubscription(models: Optional[Sequence[str]] = None,
+                                  bws: Optional[Sequence[float]] = None,
+                                  oversubs: Optional[Sequence[float]] = None,
+                                  topologies: Optional[Sequence[str]] = None
+                                  ) -> List[Dict]:
+    """Fabric what-if: the same collectives priced on a Clos fabric with
+    oversubscribed ToR uplinks instead of one flat link.  Rows come from
+    the registered ``fabric`` grid, the sweep the ``fabric_suite`` golden
+    artifact gates in CI.  Per (model, bandwidth, topology) the row holds
+    the scaling factor at each oversubscription ratio plus the retention
+    of the 1:1 (bitwise-flat) baseline — the striped ring and tree pay
+    the full 1/oversub rate cut, while hierarchical's rack-local
+    reduction keeps only the leader on the spine and retains ~100 %."""
+    spec = _grid("fabric",
+                 **({} if models is None else dict(models=tuple(models))),
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if oversubs is None
+                    else dict(oversubscription=tuple(float(o)
+                                                     for o in oversubs))),
+                 **({} if topologies is None
+                    else dict(topology=tuple(topologies))))
+    ix = _cells(spec)
+    n, tr = spec.n_servers[0], spec.transport[0]
+    out = []
+    for m in spec.models:
+        for bw in spec.bandwidth_gbps:
+            for topo in spec.topology:
+                base = ix[_k(m, n, bw, tr, topo=topo, fabric="clos",
+                             oversubscription=spec.oversubscription[0])]
+                row = dict(model=m, bandwidth_gbps=bw, topology=topo)
+                for ov in spec.oversubscription:
+                    c = ix[_k(m, n, bw, tr, topo=topo, fabric="clos",
+                              oversubscription=ov)]
+                    row[f"oversub{ov:g}"] = c["scaling_factor"]
+                    row[f"oversub{ov:g}_retention"] = (
+                        c["scaling_factor"] / base["scaling_factor"])
+                out.append(row)
     return out
 
 

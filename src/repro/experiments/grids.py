@@ -173,6 +173,22 @@ _register(ExperimentSpec(
     fault_model=("none", "slowdown:1", "slowdown:5"),
     churn_rate=(0.0, 0.64), worker_bw_skew=(0.0, 0.5), fault_seed=2027))
 
+# Fabric axes (the tentpole of the multi-link max-min engine): the same
+# collectives priced on a Clos fabric with oversubscribed ToR uplinks
+# instead of one flat link.  Striped ring/tree collectives push all
+# hosts_per_tor NICs of a rack through the uplink at once, so their solo
+# rate is min(1, 1/oversubscription); hierarchical reduces rack-locally
+# and only a leader crosses the spine, riding out oversubscription.  The
+# gated claims: 1:1 cells are *bitwise* the flat topology (the uplink is
+# elided from the path, so the original engine runs verbatim); scaling is
+# monotone non-increasing in oversubscription; hierarchical never loses
+# to the flat ring at 4:1.  Gated by artifacts/golden/fabric_suite.json.
+_register(ExperimentSpec(
+    name="fabric", models=("resnet50", "vgg16"), n_servers=(8,),
+    bandwidth_gbps=(10.0, 100.0), transport=("ideal",),
+    topology=("ring", "tree", "hierarchical"),
+    fabric=("clos",), oversubscription=(1.0, 2.0, 4.0)))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
@@ -183,6 +199,7 @@ SUITES: Dict[str, Tuple[str, ...]] = {
     "xxl": ("xxl-contention",),
     "compression": ("compression",),
     "churn": ("churn",),
+    "fabric": ("fabric",),
 }
 
 

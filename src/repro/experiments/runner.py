@@ -79,7 +79,10 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
     EF-SGD residual cost to lossy-codec cells; ``codec="none"`` cells
     ignore it, so a grid can sweep codecs with EF on without its baseline
     cells rejecting the knob) — all default-off, leaving the historical
-    cells' code path (and bits) untouched.
+    cells' code path (and bits) untouched.  ``fabric``/``oversubscription``
+    lower the cell onto NIC -> ToR-uplink paths (:mod:`repro.core.fabric`)
+    priced at the engine's max-min fair share; ``fabric="none"`` (and the
+    elided 1:1 case) is bitwise the flat link.
     """
     kwargs = dict(
         n_workers=cell.n_servers * spec.gpus_per_server,
@@ -98,6 +101,8 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
         churn_rate=cell.churn_rate,
         worker_bw_skew=cell.worker_bw_skew,
         fault_seed=spec.fault_seed,
+        fabric=cell.fabric,
+        oversubscription=cell.oversubscription,
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())

@@ -23,11 +23,12 @@ SPEC_VERSION = 1
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
              "compression_ratio", "topology", "scheduler", "n_jobs",
              "n_rails", "jitter_ms", "codec", "fault_model", "churn_rate",
-             "worker_bw_skew")
+             "worker_bw_skew", "fabric", "oversubscription")
 
 AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
                  "jitter_ms": 0.0, "codec": "none", "fault_model": "none",
-                 "churn_rate": 0.0, "worker_bw_skew": 0.0}
+                 "churn_rate": 0.0, "worker_bw_skew": 0.0,
+                 "fabric": "none", "oversubscription": 1.0}
 
 # axes added after the first golden artifacts shipped: omitted from
 # serialized cells/specs while at their default, so pre-axis artifacts stay
@@ -35,7 +36,8 @@ AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
 # grids that do not sweep them
 _ELIDED_AT_DEFAULT = {"n_jobs": 1, "n_rails": 1, "jitter_ms": 0.0,
                       "codec": "none", "fault_model": "none",
-                      "churn_rate": 0.0, "worker_bw_skew": 0.0}
+                      "churn_rate": 0.0, "worker_bw_skew": 0.0,
+                      "fabric": "none", "oversubscription": 1.0}
 
 
 def axis_value(cell: Dict, axis: str):
@@ -67,6 +69,8 @@ class Cell:
     fault_model: str = "none"       # worker-correlated slowdown (core.faults)
     churn_rate: float = 0.0         # expected dropout events per iteration
     worker_bw_skew: float = 0.0     # per-worker bandwidth asymmetry scale
+    fabric: str = "none"            # datacenter fabric (core.fabric)
+    oversubscription: float = 1.0   # ToR uplink oversubscription ratio
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
@@ -114,6 +118,8 @@ class ExperimentSpec:
     fault_model: Tuple[str, ...] = ("none",)    # fault axis (core.faults)
     churn_rate: Tuple[float, ...] = (0.0,)  # dropout/rejoin rate axis
     worker_bw_skew: Tuple[float, ...] = (0.0,)  # asymmetric-bw axis
+    fabric: Tuple[str, ...] = ("none",)     # fabric axis (core.fabric)
+    oversubscription: Tuple[float, ...] = (1.0,)    # ToR uplink oversub
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
@@ -132,14 +138,16 @@ class ExperimentSpec:
                       ("jitter_seed", 0), ("codec", ("none",)),
                       ("error_feedback", False), ("fault_model", ("none",)),
                       ("churn_rate", (0.0,)), ("worker_bw_skew", (0.0,)),
-                      ("fault_seed", 0))
+                      ("fault_seed", 0), ("fabric", ("none",)),
+                      ("oversubscription", (1.0,)))
 
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
         for f in ("models", "n_servers", "bandwidth_gbps", "transport",
                   "compression_ratio", "topology", "scheduler", "n_jobs",
                   "n_rails", "jitter_ms", "codec", "fault_model",
-                  "churn_rate", "worker_bw_skew"):
+                  "churn_rate", "worker_bw_skew", "fabric",
+                  "oversubscription"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -149,15 +157,18 @@ class ExperimentSpec:
     def expand(self) -> Tuple[Cell, ...]:
         """Cartesian product in stable axis order (model outermost)."""
         return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j),
-                          int(nr), float(jm), cd, fml, float(cr), float(sk))
-                     for m, n, bw, t, r, topo, s, j, nr, jm, cd, fml, cr, sk
+                          int(nr), float(jm), cd, fml, float(cr), float(sk),
+                          fb, float(ov))
+                     for m, n, bw, t, r, topo, s, j, nr, jm, cd, fml, cr, sk,
+                     fb, ov
                      in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
                          self.topology, self.scheduler, self.n_jobs,
                          self.n_rails, self.jitter_ms, self.codec,
                          self.fault_model, self.churn_rate,
-                         self.worker_bw_skew))
+                         self.worker_bw_skew, self.fabric,
+                         self.oversubscription))
 
     @property
     def n_cells(self) -> int:
@@ -167,7 +178,8 @@ class ExperimentSpec:
                 * len(self.scheduler) * len(self.n_jobs)
                 * len(self.n_rails) * len(self.jitter_ms)
                 * len(self.codec) * len(self.fault_model)
-                * len(self.churn_rate) * len(self.worker_bw_skew))
+                * len(self.churn_rate) * len(self.worker_bw_skew)
+                * len(self.fabric) * len(self.oversubscription))
 
     @property
     def workload_units(self) -> int:

@@ -458,6 +458,45 @@ def _churn(cells: Sequence[Dict]) -> Check:
             "faulted_cell_replays_bitwise": replay}
 
 
+def _fabric(cells: Sequence[Dict]) -> Check:
+    """The fabric-lowering claims the fabric golden suite gates.
+
+    - a 1:1 cell is *bitwise* identical to a ``simulate`` call that never
+      heard of the fabric axes — at 1:1 the uplink can never bind, so
+      :meth:`repro.core.fabric.Fabric.path` elides it and the original
+      single-link engine runs verbatim (the elision contract);
+    - scaling is monotone non-increasing in oversubscription at every
+      (model, bandwidth, topology) point: a thinner uplink can only slow
+      the collective down;
+    - hierarchical never loses to the flat ring at 4:1 — rack-local
+      reduction puts only the leader on the spine (uplink multiplicity
+      1 <= capacity 1 at 4:1 with 4 hosts/ToR), so it dodges the
+      oversubscription the striped ring pays 4x for.
+    """
+    from repro.experiments.spec import axis_value
+    by = {(c["model"], c["bandwidth_gbps"], c["topology"],
+           axis_value(c, "oversubscription")): c for c in cells}
+    ovs = sorted({k[3] for k in by})
+    sf = {k: c["scaling_factor"] for k, c in by.items()}
+    mono = all(sf[(m, bw, t, b)] <= sf[(m, bw, t, a)] + 1e-9
+               for (m, bw, t, _) in by for a, b in zip(ovs, ovs[1:]))
+    hier_ok = all(by[(m, bw, "hierarchical", 4.0)]["t_overhead"]
+                  <= by[(m, bw, "ring", 4.0)]["t_overhead"] + 1e-9
+                  for (m, bw, t, ov) in by if t == "ring" and ov == 4.0)
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    flat = [c for c in cells if axis_value(c, "oversubscription") == 1.0]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"],
+                         topology=c["topology"]).t_sync == c["t_sync"]
+                for c in flat)
+    return {"oversub1_matches_flat_simulate_bitwise": exact,
+            "scaling_monotone_nonincreasing_in_oversub": mono,
+            "hierarchical_overhead_le_ring_at_4to1": hier_ok}
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -475,6 +514,7 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "straggler": _straggler,
     "compression": _compression,
     "churn": _churn,
+    "fabric": _fabric,
 }
 
 

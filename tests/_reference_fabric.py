@@ -1,0 +1,240 @@
+"""Independent max-min fairness oracle for the multi-link engine.
+
+This module is the differential-testing counterpart of the fabric
+tentpole: a from-scratch O(n^2) implementation of bottleneck max-min
+fair sharing and a rescan-everything event loop over multi-link paths,
+sharing **no code** with ``repro.core.events`` beyond the ``FlowSpec`` /
+``FlowResult`` data types.  Its value is being written differently:
+
+- :func:`reference_maxmin` computes each round's fill level from the
+  *flow* perspective (every unfrozen flow's own bottleneck rate, take
+  the global minimum) where the engine's ``maxmin_rates`` works from the
+  *link* perspective (each link's saturation level, take the minimum).
+  The max-min fair allocation is unique, so both must land on the same
+  rate vector to rounding error — that uniqueness is the whole contract
+  ``tests/test_fabric.py`` checks on randomized instances.
+- :class:`ReferenceFabricEngine` generalizes the frozen seed loop in
+  ``tests/_reference_engine.py`` to paths: rescan all pending flows at
+  every event, recompute the full rate vector from scratch, advance all
+  wires stepwise.  Quadratic and proud of it.
+
+Like the seed reference, flows follow the engine's job semantics: one
+wire in flight per job in (priority, op_id) service order, ready gating,
+``hold``/``latency``/``duration`` completion bookkeeping, and the exact
+``start + work`` closed form for flows that were never contended.  A
+flow is contended when it ever shared a link with another active flow or
+cannot run at rate 1.0 alone (some path link's capacity is below the
+flow's own multiplicity on it).
+
+Churn is deliberately out of scope here — teardown semantics are pinned
+by the engine-vs-engine tests in ``tests/test_faults.py``, not by this
+oracle.
+"""
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.events import FlowResult, FlowSpec
+
+
+def _demand(flow: FlowSpec) -> Dict[str, float]:
+    """link id -> multiplicity along the flow's route."""
+    d: Dict[str, float] = {}
+    for nm in (flow.path or (flow.link,)):
+        d[nm] = d.get(nm, 0.0) + 1.0
+    return d
+
+
+def reference_maxmin(demands: Sequence[Dict[str, float]],
+                     capacities: Dict[str, float]) -> List[float]:
+    """Max-min fair rates, solved from the flow perspective.
+
+    Water-filling: all unfrozen flows rise together; each round, every
+    unfrozen flow's own ceiling is the tightest ``residual / load`` over
+    its links, and the *global* fill level is the smallest such ceiling.
+    Flows whose ceiling equals that level (their bottleneck is tight)
+    freeze there; their consumption leaves the pool and the rest keep
+    rising.  Rates cap at 1.0 — the engine's NIC-relative full rate.
+
+    Every round freezes at least one flow, so the loop is O(n) rounds of
+    O(n * L) scans — quadratic, independent of the engine's link-indexed
+    bookkeeping.
+    """
+    n = len(demands)
+    rates = [0.0] * n
+    frozen = [False] * n
+    residual: Dict[str, float] = {}
+    for d in demands:
+        for nm in d:
+            residual.setdefault(nm, float(capacities.get(nm, 1.0)))
+    while not all(frozen):
+        # load each link carries from still-rising flows
+        load: Dict[str, float] = {nm: 0.0 for nm in residual}
+        for i, d in enumerate(demands):
+            if frozen[i]:
+                continue
+            for nm, m in d.items():
+                load[nm] += m
+        # each unfrozen flow's ceiling; the fill level is the global min
+        ceil: List[Optional[float]] = [None] * n
+        level = None
+        for i, d in enumerate(demands):
+            if frozen[i]:
+                continue
+            c = min(max(residual[nm], 0.0) / load[nm] for nm in d)
+            ceil[i] = c
+            if level is None or c < level:
+                level = c
+        if level is None or level >= 1.0:
+            for i in range(n):
+                if not frozen[i]:
+                    rates[i] = 1.0   # per-flow full-rate cap
+                    frozen[i] = True
+            break
+        # freeze every flow whose own bottleneck is (within float ties)
+        # the tight one; at least the argmin freezes, so progress is
+        # guaranteed
+        cut = level * (1.0 + 1e-12) + 1e-18
+        for i in range(n):
+            if frozen[i] or ceil[i] is None or ceil[i] > cut:
+                continue
+            rates[i] = level
+            frozen[i] = True
+            for nm, m in demands[i].items():
+                residual[nm] -= m * level
+    return rates
+
+
+class _Run:
+    __slots__ = ("flow", "demand", "start", "remaining", "contended")
+
+    def __init__(self, flow: FlowSpec, start: float):
+        self.flow = flow
+        self.demand = _demand(flow)
+        self.start = start
+        self.remaining = flow.work
+        self.contended = False
+
+
+class ReferenceFabricEngine:
+    """Rescan-everything multi-link loop: the seed structure, plus paths."""
+
+    def __init__(self, capacities: Optional[Dict[str, float]] = None,
+                 max_iters_factor: int = 10):
+        self.capacities = dict(capacities or {})
+        self.max_iters_factor = max_iters_factor
+
+    def _rates(self, running: Dict[str, _Run]) -> Dict[str, float]:
+        """job -> current max-min rate of its in-flight wire."""
+        jobs = list(running)
+        rs = reference_maxmin([running[j].demand for j in jobs],
+                              self.capacities)
+        return dict(zip(jobs, rs))
+
+    def run(self, flows: Sequence[FlowSpec]) -> List[FlowResult]:
+        """Execute ``flows``; returns results in input order."""
+        pending: Dict[str, List[FlowSpec]] = {}
+        for f in flows:
+            pending.setdefault(f.job, []).append(f)
+        for q in pending.values():
+            q.sort(key=lambda f: (f.priority, f.op_id), reverse=True)
+
+        job_free: Dict[str, float] = {j: 0.0 for j in pending}
+        running: Dict[str, _Run] = {}
+        results: Dict[int, FlowResult] = {}
+        t = 0.0
+        n_total = len(flows)
+        max_iters = self.max_iters_factor * n_total + 100
+
+        def _pick(job: str) -> Optional[FlowSpec]:
+            q = pending[job]
+            for i in range(len(q) - 1, -1, -1):  # sorted reverse: best last
+                if q[i].ready <= t:
+                    return q.pop(i)
+            return None
+
+        iters = 0
+        while len(results) < n_total:
+            iters += 1
+            if iters > max_iters:
+                raise RuntimeError("reference fabric engine failed to "
+                                   f"converge ({len(results)}/{n_total})")
+
+            # -- admissions at the current time ---------------------------
+            admitted = False
+            for job in pending:
+                if job in running or job_free[job] > t or not pending[job]:
+                    continue
+                flow = _pick(job)
+                if flow is None:
+                    continue
+                run = _Run(flow, start=t)
+                if any(self.capacities.get(nm, 1.0) < m
+                       for nm, m in run.demand.items()):
+                    # cannot run at full rate even alone: no closed form
+                    run.contended = True
+                for other in running.values():
+                    if any(nm in other.demand for nm in run.demand):
+                        run.contended = True
+                        other.contended = True
+                running[job] = run
+                admitted = True
+            if admitted:
+                continue  # membership changed; recompute the rate vector
+
+            rates = self._rates(running)
+
+            # -- next event: a completion or a job becoming serviceable ---
+            t_next = None
+            for job, run in running.items():
+                r = rates[job]
+                if r > 0.0:
+                    proj = t + run.remaining / r
+                    if t_next is None or proj < t_next:
+                        t_next = proj
+            for job, q in pending.items():
+                if job in running or not q:
+                    continue
+                trigger = max(job_free[job], min(f.ready for f in q))
+                if t_next is None or trigger < t_next:
+                    t_next = trigger
+            if t_next is None:
+                raise RuntimeError(
+                    "reference fabric engine stalled with pending flows")
+            t_next = max(t_next, t)
+
+            # -- advance all running wires to t_next ----------------------
+            dt = t_next - t
+            done: List[Tuple[str, _Run]] = []
+            for job, run in running.items():
+                r = rates[job]
+                run.remaining -= dt * r
+                if r > 0.0 and (
+                        run.remaining <= run.flow.work * 1e-12 + 1e-18
+                        or t_next + run.remaining / r <= t_next):
+                    done.append((job, run))
+            t = t_next
+
+            for job, run in done:
+                flow = run.flow
+                if not run.contended:
+                    wire_end = run.start + flow.work  # rate 1.0 throughout
+                    if flow.hold and flow.duration is not None:
+                        end = run.start + flow.duration
+                    else:
+                        end = wire_end + flow.latency
+                else:
+                    wire_end = t
+                    end = wire_end + flow.latency
+                results[flow.op_id] = FlowResult(
+                    flow.op_id, job, run.start, wire_end, end, run.contended)
+                del running[job]
+                job_free[job] = end if flow.hold else wire_end
+
+        return [results[f.op_id] for f in flows]
+
+
+def run_reference_fabric_flows(flows: Sequence[FlowSpec],
+                               capacities: Optional[Dict[str, float]] = None,
+                               max_iters_factor: int = 10
+                               ) -> List[FlowResult]:
+    """Convenience wrapper: execute ``flows`` on a fresh oracle engine."""
+    return ReferenceFabricEngine(capacities, max_iters_factor).run(flows)

@@ -161,6 +161,42 @@ def test_engine_churn_matches_rail_lane_jobs():
     assert res[1].end == 0.5                             # cancelled via lane
 
 
+def test_engine_churn_under_fabric_cancels_on_all_path_links():
+    """A drop tears the in-flight flow off *every* link of its multi-link
+    path at once: the survivor's max-min rate rises immediately (the
+    freed uplink multiplicity is back in the pool), the dead worker's
+    pending flow cancels at the drop time, and the torn-down wire
+    restarts from scratch after the stall.
+
+    Setup: path nic + 2x uplink (cap 1.0), so one flow alone runs at
+    1/2 and two flows split the uplink at 1/4 each."""
+    path = ("nic", "up", "up")
+    caps = {"up": 1.0}
+    flows = [
+        FlowSpec(op_id=0, ready=0.0, work=1.0, job="a", worker=0, path=path),
+        FlowSpec(op_id=1, ready=0.0, work=1.0, job="a", worker=1, path=path),
+        FlowSpec(op_id=2, ready=0.0, work=1.0, job="b", worker=5, path=path),
+    ]
+    base = {r.op_id: r for r in run_flows(flows, capacities=caps)}
+    # both wires at 1/4 until t=4, then a's second flow alone at 1/2
+    assert base[0].wire_end == pytest.approx(4.0)
+    assert base[2].wire_end == pytest.approx(4.0)
+    assert base[1].wire_end == pytest.approx(6.0)
+
+    churn = [ChurnEvent(t=1.0, job="a", kind="drop", worker=1, stall=2.0)]
+    res = {r.op_id: r for r in run_flows(flows, capacities=caps,
+                                         churn=churn)}
+    # dead worker's pending flow completes trivially at the drop time
+    assert res[1].start == res[1].wire_end == res[1].end == 1.0
+    # survivor job b had 0.75 left: alone at 1/2 from t=1 -> done at 2.5,
+    # which is only possible if the teardown freed both uplink slots
+    assert res[2].wire_end == pytest.approx(2.5)
+    # the torn-down wire restarts from scratch after the stall (t=3.0)
+    # and runs alone at 1/2: done at 5.0
+    assert res[0].start == pytest.approx(3.0)
+    assert res[0].wire_end == pytest.approx(5.0)
+
+
 def test_engine_zero_churn_list_keeps_small_path():
     flows = [FlowSpec(op_id=i, ready=0.0, work=1.0, job="j")
              for i in range(3)]
