@@ -27,6 +27,11 @@ Writes these metrics to ``BENCH_sweep.json``:
   (``NetworkEngine._run_maxmin``) re-solving the rate vector at every
   membership change, through the same ``simulate_contention`` entry the
   ``fabric`` golden grid uses;
+- **wan_cell_ms** — the lossiest hot cell of the gated ``wan`` grid
+  (ResNet-50, priority + int8 at 10 Gbps over ``loss=0.05, rtt=20``):
+  the lossy-transport lowering (goodput inflation + RTT) plus seeded
+  retransmission stalls through the ``_RETX`` calendar machinery,
+  end to end through ``simulate``;
 - **fastpath_speedup** — the closed-form fifo path in
   ``repro.core.simulator`` against the event engine on a long serialized
   plan;
@@ -84,6 +89,7 @@ HEAP_SPEEDUP_FLOOR = 3.5
 XXL_CELL_MS_CEILING = 100.0     # worst xxl-contention cell, end to end
 ENGINE_EVENTS_FLOOR = 5e6       # chunked-stress events/sec through run_batch
 FABRIC_CELL_MS_CEILING = 50.0   # 4-job 4:1-fabric contention cell
+WAN_CELL_MS_CEILING = 50.0      # lossiest wan-grid cell, end to end
 DEFAULT_OUT = "BENCH_sweep.json"
 DEFAULT_BASELINE = REPO_ROOT / "artifacts" / "bench" / "BENCH_sweep.json"
 
@@ -325,6 +331,32 @@ def bench_fabric_cell(reps: int) -> Dict[str, float]:
     return {"fabric_cell_ms": _measure(cell, reps) * 1e3}
 
 
+def bench_wan_cell(reps: int) -> Dict[str, float]:
+    """The lossiest hot cell of the gated ``wan`` grid, end to end.
+
+    ResNet-50 under priority + int8 at 10 Gbps over a
+    ``loss=0.05, rtt=20`` link (the grid's ``fault_seed=2029``): every
+    flow pays the ``1/(1-loss)`` goodput inflation and the RTT through
+    the lossy lowering, and the seeded retransmission draws land as
+    ``_RETX`` calendar stalls — the bulk-commit fences the fault axes
+    introduced, now on the loss path.  The CI bar holds ``wan_cell_ms``
+    under :data:`WAN_CELL_MS_CEILING` on the baseline host (seed-probe
+    normalized, like the xxl and fabric ceilings)."""
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+
+    tl = from_cnn("resnet50")
+
+    def cell():
+        simulate(tl, n_workers=64, bandwidth=10 * GBPS,
+                 transport="horovod_tcp", scheduler="priority", n_chunks=8,
+                 codec="int8", fault_seed=2029,
+                 link_profile="wan:loss=0.05,rtt=20")
+
+    return {"wan_cell_ms": _measure(cell, reps) * 1e3}
+
+
 def bench_sweep(reps: int) -> Dict[str, float]:
     from repro.experiments import run_spec
     from repro.experiments.spec import ExperimentSpec
@@ -422,6 +454,7 @@ def run_bench(quick: bool) -> Dict:
     metrics.update(bench_heap_engine(reps))
     metrics.update(bench_xxl_cell(reps))
     metrics.update(bench_fabric_cell(reps))
+    metrics.update(bench_wan_cell(reps))
     metrics.update(bench_fastpath(reps))
     metrics.update(bench_small_plan(reps))
     return {
@@ -495,6 +528,12 @@ def check_regression(result: Dict, baseline_path: Path) -> List[str]:
             f"fabric contention cell {fab:.1f} ms ({fab * speed:.1f} ms "
             f"normalized to the baseline host) exceeds the "
             f"{FABRIC_CELL_MS_CEILING:.0f} ms ceiling")
+    wan = result["metrics"].get("wan_cell_ms")
+    if wan is not None and wan * speed > WAN_CELL_MS_CEILING:
+        failures.append(
+            f"wan lossy cell {wan:.1f} ms ({wan * speed:.1f} ms "
+            f"normalized to the baseline host) exceeds the "
+            f"{WAN_CELL_MS_CEILING:.0f} ms ceiling")
     return failures
 
 
@@ -531,6 +570,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"fabric:  4-job 4:1-fabric contention cell: "
           f"{m['fabric_cell_ms']:.1f} ms end to end "
           f"(ceiling {FABRIC_CELL_MS_CEILING:.0f} ms on the baseline host)")
+    print(f"wan:     lossy hot cell (loss=0.05, priority+int8): "
+          f"{m['wan_cell_ms']:.1f} ms end to end "
+          f"(ceiling {WAN_CELL_MS_CEILING:.0f} ms on the baseline host)")
     print(f"fastpath: {m['fastpath_plan_ops']:.0f}-op fifo plan: engine "
           f"{m['engine_fifo_ms']:.2f} ms -> closed form "
           f"{m['fastpath_ms']:.2f} ms ({m['fastpath_speedup']:.1f}x)")

@@ -156,8 +156,12 @@ DEFAULT_JOB = "job0"
 
 # calendar event kinds: completions sort first at a tie, then faults (a
 # completion landing exactly at a fault instant still completes), then
-# admissions (a fault precedes any same-time admission it should gate)
-_DONE, _FAULT, _ADMIT = 0, 1, 2
+# admissions (a fault precedes any same-time admission it should gate),
+# then retransmission timeouts (a same-time admission is admitted first
+# and then pulled back — the segment was already in flight when it timed
+# out).  _RETX shares _FAULT's handler: pull-back + stall, no worker
+# cancellation (ChurnEvent kind "retx" never matches the "drop" gate).
+_DONE, _FAULT, _ADMIT, _RETX = 0, 1, 2, 3
 _INF = float("inf")
 _NAN = float("nan")
 
@@ -252,8 +256,13 @@ class ChurnEvent(NamedTuple):
     iteration).  ``kind == "rejoin"``: the worker comes back — only the
     pull-back and the stall apply (its cancelled flows stay cancelled;
     re-admission costs, not recovered work, are the priced quantity).
-    ``stall`` is the re-bucketing/remap cost: the job admits nothing
-    before ``t + stall``.  ``job`` matches the flow's job name exactly or
+    ``kind == "retx"``: a retransmission timeout on a lossy link
+    (:func:`repro.core.transport.retx_events`) — pull-back + stall like a
+    rejoin, lowered onto its own ``_RETX`` calendar kind so a timeout at
+    an admission instant fires *after* the admission it interrupts.
+    ``stall`` is the re-bucketing/remap cost (for ``retx``: the backoff
+    ``timeout * backoff**k``): the job admits nothing before
+    ``t + stall``.  ``job`` matches the flow's job name exactly or
     as a rail-lane prefix (``job0`` also hits ``job0@r1``).  Events are
     plain data — :func:`repro.core.faults.churn_events` draws them from
     the seeded fault stream.
@@ -1558,7 +1567,8 @@ class NetworkEngine:
                 if not matched:
                     continue
                 seq += 1
-                cal.append((fe.t if fe.t > 0.0 else 0.0, _FAULT, seq,
+                cal.append((fe.t if fe.t > 0.0 else 0.0,
+                            _RETX if fe.kind == "retx" else _FAULT, seq,
                             matched, fe))
 
         start, wire, end, contended = _run_core(
@@ -1612,7 +1622,14 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
     contended = np.zeros(n_total, dtype=bool)
     n_done = 0
     stale = 0                   # consecutive no-progress calendar pops
-    stall_limit = _STALL_FACTOR * n_total + _STALL_BASE
+    # the budget scales with every entry that can legitimately pop without
+    # serving a flow: each fault/retx entry both pops once itself and can
+    # supersede one pending admission, so a dense _RETX calendar (long
+    # backoff stalls, zero committed work in between) must widen the
+    # limit rather than trip it.  _apply_fault resets the counter — a
+    # fault *is* committed calendar work — so this is belt and braces.
+    n_faults = sum(1 for ev in cal if ev[1] == _FAULT or ev[1] == _RETX)
+    stall_limit = _STALL_FACTOR * (n_total + 2 * n_faults) + _STALL_BASE
     sweep_at = 256              # calendar size that triggers a compaction
 
     # -- admission: put flow ``i`` on its link at time ``t`` ----------------
@@ -2141,8 +2158,11 @@ def _run_core(n_total: int, wk_col, lt_col, hd_col, du_col, rd_np,
                 t = proj
             continue
 
-        if ev[1] == _FAULT:
-            # ---- membership change: apply to every matched job ------------
+        if ev[1] == _FAULT or ev[1] == _RETX:
+            # ---- membership change / retransmission timeout: apply to
+            # every matched job (retx shares the fault handler — its kind
+            # never matches the "drop" cancellation gate, so it reduces to
+            # pull-back + backoff stall)
             for jb in ev[3]:
                 _apply_fault(jb, ev[4], t)
             continue

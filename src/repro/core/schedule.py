@@ -64,6 +64,7 @@ import numpy as np
 from repro.core.codec import SIZE_ADAPTIVE_THRESHOLD, Codec
 from repro.core.events import (DEFAULT_JOB, FlowBatch, FlowSpec, _EMPTY_BATCH,
                                _intern, serialized_chain)
+from repro.core.transport import LinkProfile
 
 DEFAULT_CHUNKS = 4
 
@@ -358,10 +359,53 @@ def codec_compute_seconds(plan: CommPlan,
 # lowering a plan onto the event engine
 # ---------------------------------------------------------------------------
 
+def _apply_link(flows: List[FlowSpec],
+                lp: Optional[LinkProfile]) -> List[FlowSpec]:
+    """Deterministic lossy-link pricing over a lowered flow list.
+
+    The fluid-model mean of a :class:`~repro.core.transport.LinkProfile`:
+    wire work inflates by the expected retransmission factor
+    ``1/(1-loss)`` and the propagation RTT joins the fixed post-wire
+    latency (``duration`` keeps its ``work + latency`` identity).  The
+    stochastic tail — RTO stalls — is priced separately by
+    :func:`repro.core.transport.retx_events`.  A null (or absent) profile
+    returns the *same object*: the zero-loss bypass is bitwise, which is
+    what keeps every pre-WAN golden artifact stable.  The elementwise
+    float64 arithmetic here and in :func:`_apply_link_batch` is identical
+    op for op, preserving the tuple-vs-columnar bit-identity contract.
+    """
+    if lp is None or lp.is_null:
+        return flows
+    fac = 1.0 / (1.0 - lp.loss)
+    rtt = lp.rtt
+    new = tuple.__new__
+    out: List[FlowSpec] = []
+    for f in flows:
+        w = f[2] * fac
+        dur = None if f[8] is None else f[8] + (w - f[2]) + rtt
+        out.append(new(FlowSpec, (f[0], f[1], w, f[3] + rtt, f[4], f[5],
+                                  f[6], f[7], dur, f[9], f[10], f[11])))
+    return out
+
+
+def _apply_link_batch(batch: FlowBatch,
+                      lp: Optional[LinkProfile]) -> FlowBatch:
+    """Columnar :func:`_apply_link` — same float ops, elementwise."""
+    if lp is None or lp.is_null:
+        return batch
+    fac = 1.0 / (1.0 - lp.loss)
+    rtt = lp.rtt
+    work = batch.work * fac
+    return batch._replace(
+        work=work, latency=batch.latency + rtt,
+        duration=batch.duration + (work - batch.work) + rtt)
+
+
 def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
                   job: str = "job0", link: str = "nic",
                   op_id_base: int = 0, n_rails: int = 1,
-                  codecs: Optional[Mapping[str, CodecLowering]] = None
+                  codecs: Optional[Mapping[str, CodecLowering]] = None,
+                  link_profile: Optional[LinkProfile] = None
                   ) -> List[FlowSpec]:
     """CommOps -> engine flows under a cost model.
 
@@ -399,6 +443,11 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
     ``codecs=None`` — or a table whose codecs are all free — takes the
     pre-codec arithmetic path for each op: a ``none`` plan is
     bit-identical with a build that never heard of codecs.
+
+    ``link_profile`` (a non-null
+    :class:`~repro.core.transport.LinkProfile`) prices the lossy-link
+    mean as a final elementwise pass (:func:`_apply_link`); ``None`` or
+    the null profile leaves the lowering untouched, object for object.
     """
     hold = plan.scheduler == "fifo"
     flows: List[FlowSpec] = []
@@ -432,7 +481,7 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
                     job=job if op.channel == 0 else f"{job}@r{op.channel}",
                     link=link, hold=hold, duration=lat + rail_work,
                     rail=op.channel))
-        return flows
+        return _apply_link(flows, link_profile)
     wire_time = getattr(cost, "wire_time", cost.time)
     if n_rails <= 1:
         for op in plan.ops:
@@ -443,7 +492,7 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
                 latency=max(0.0, total - wire), priority=op.priority,
                 job=job, link=f"{link}{op.channel}" if op.channel else link,
                 hold=hold, duration=total))
-        return flows
+        return _apply_link(flows, link_profile)
     for op in plan.ops:
         total = cost.time(op.size) + per_tensor_overhead * op.n_tensors
         wire = min(wire_time(op.size), total)
@@ -455,7 +504,7 @@ def plan_to_flows(plan: CommPlan, cost, per_tensor_overhead: float = 0.0, *,
             job=job if op.channel == 0 else f"{job}@r{op.channel}",
             link=link, hold=hold, duration=lat + rail_work,
             rail=op.channel))
-    return flows
+    return _apply_link(flows, link_profile)
 
 
 def _time_col(cost, sizes: np.ndarray) -> np.ndarray:
@@ -496,7 +545,8 @@ def plan_to_flow_batch(plan: CommPlan, cost,
                        per_tensor_overhead: float = 0.0, *,
                        job: str = "job0", link: str = "nic",
                        op_id_base: int = 0, n_rails: int = 1,
-                       codecs: Optional[Mapping[str, CodecLowering]] = None
+                       codecs: Optional[Mapping[str, CodecLowering]] = None,
+                       link_profile: Optional[LinkProfile] = None
                        ) -> FlowBatch:
     """Columnar :func:`plan_to_flows`: one vectorized pass over the plan
     producing a :class:`FlowBatch` instead of a FlowSpec list.
@@ -565,21 +615,21 @@ def plan_to_flow_batch(plan: CommPlan, cost,
         if n_rails <= 1:
             links, lcode = _channel_names(
                 chans, lambda c: f"{link}{c}" if c else link)
-            return FlowBatch(
+            return _apply_link_batch(FlowBatch(
                 op_id=op_ids, ready=ready, work=wires, latency=lat,
                 priority=pr, duration=totals + dec, hold=hold,
                 jobs=(job,), job=np.zeros(n, dtype=np.intp),
                 links=links, link=lcode, rail=np.zeros(n, dtype=np.intp),
-                worker=np.zeros(n, dtype=np.intp))
+                worker=np.zeros(n, dtype=np.intp)), link_profile)
         rail_work = wires * n_rails
         jobs, jcode = _channel_names(
             chans, lambda c: job if c == 0 else f"{job}@r{c}")
-        return FlowBatch(
+        return _apply_link_batch(FlowBatch(
             op_id=op_ids, ready=ready, work=rail_work, latency=lat,
             priority=pr, duration=lat + rail_work, hold=hold,
             jobs=jobs, job=jcode, links=(link,),
             link=np.zeros(n, dtype=np.intp), rail=chans,
-            worker=np.zeros(n, dtype=np.intp))
+            worker=np.zeros(n, dtype=np.intp)), link_profile)
 
     totals = _time_col(cost, sizes) + pto * nt
     wires = np.minimum(_wire_col(cost, sizes), totals)
@@ -587,21 +637,21 @@ def plan_to_flow_batch(plan: CommPlan, cost,
     if n_rails <= 1:
         links, lcode = _channel_names(
             chans, lambda c: f"{link}{c}" if c else link)
-        return FlowBatch(
+        return _apply_link_batch(FlowBatch(
             op_id=op_ids, ready=ready, work=wires, latency=lat,
             priority=pr, duration=totals, hold=hold,
             jobs=(job,), job=np.zeros(n, dtype=np.intp),
             links=links, link=lcode, rail=np.zeros(n, dtype=np.intp),
-            worker=np.zeros(n, dtype=np.intp))
+            worker=np.zeros(n, dtype=np.intp)), link_profile)
     rail_work = wires * n_rails                # per-rail bw = aggregate / n
     jobs, jcode = _channel_names(
         chans, lambda c: job if c == 0 else f"{job}@r{c}")
-    return FlowBatch(
+    return _apply_link_batch(FlowBatch(
         op_id=op_ids, ready=ready, work=rail_work, latency=lat,
         priority=pr, duration=lat + rail_work, hold=hold,
         jobs=jobs, job=jcode, links=(link,),
         link=np.zeros(n, dtype=np.intp), rail=chans,
-        worker=np.zeros(n, dtype=np.intp))
+        worker=np.zeros(n, dtype=np.intp)), link_profile)
 
 
 def clone_flows(flows: Sequence[FlowSpec], op_id_base: int, job: str, *,

@@ -64,7 +64,8 @@ from repro.core.schedule import (CodecLowering, CommPlan, assign_codec,
                                  lower_buckets, plan_to_flow_batch,
                                  plan_to_flows)
 from repro.core.timeline import GradTimeline
-from repro.core.transport import Transport, get_transport
+from repro.core.transport import (LinkProfile, Transport, get_transport,
+                                  parse_link_profile, retx_events)
 
 
 BUCKET_FIELDS = ("flush_time", "size", "n_tensors", "start", "end")
@@ -350,7 +351,8 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                 fault: Optional[FaultModel] = None,
                 fault_seed: int = 0, n_workers: int = 1,
                 path: Tuple[str, ...] = (),
-                capacities: Optional[dict] = None
+                capacities: Optional[dict] = None,
+                link: Optional[LinkProfile] = None
                 ) -> Tuple[List[Bucket], float, float]:
     """Map per-op flow results back to per-bucket (start, end) + busy time.
 
@@ -380,13 +382,21 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
     max-min core with the fabric's link capacities.  A path of length
     <= 1 stamps nothing — the fabric elided its uplink — leaving every
     branch byte-identical to the flat topology.
+
+    ``link`` (a non-null :class:`~repro.core.transport.LinkProfile`)
+    prices the lossy-link axis: the lowering inflates wire work and adds
+    the RTT deterministically (:func:`~repro.core.schedule._apply_link`),
+    and seeded RTO stalls (:func:`~repro.core.transport.retx_events`,
+    substream ``(4,)`` of ``fault_seed``) join the churn list — the
+    engine's ``_RETX`` calendar entries.  ``link=None`` leaves every
+    branch byte-identical to the clean-link build.
     """
     fabric_path = path if len(path) > 1 else ()
     if results is None:
         if _fastpath_enabled() and len(plan.ops) >= _ev._SMALL_PLAN_MAX_FLOWS:
             batch = plan_to_flow_batch(plan, cost, tr.per_tensor_overhead,
                                        job=job, n_rails=n_rails,
-                                       codecs=codecs)
+                                       codecs=codecs, link_profile=link)
             if jitter > 0.0:
                 batch = perturb_batch(batch, jitter, jitter_seed, stream)
             churn = None
@@ -398,6 +408,13 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                     fault, n_workers,
                     _fault_horizon(batch.ready, batch.work, batch.latency),
                     fault_seed, stream, job=job) or None
+            if link is not None and batch.n:
+                retx = retx_events(
+                    link, sum(op.size for op in plan.ops),
+                    _fault_horizon(batch.ready, batch.work, batch.latency),
+                    fault_seed, stream, job=job)
+                if retx:
+                    churn = list(churn or ()) + retx
             if fabric_path:
                 batch = batch.with_path(fabric_path)
                 rb = run_flow_batch(batch, capacities=capacities,
@@ -409,7 +426,8 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                                         if n_rails > 1 else None, churn=churn)
             return _serve_from_batch(plan, buckets, rb)
         flows = plan_to_flows(plan, cost, tr.per_tensor_overhead, job=job,
-                              n_rails=n_rails, codecs=codecs)
+                              n_rails=n_rails, codecs=codecs,
+                              link_profile=link)
         if jitter > 0.0:
             flows = perturb_flows(flows, jitter, jitter_seed, stream)
         churn = None
@@ -423,6 +441,15 @@ def _serve_plan(plan: CommPlan, buckets: Sequence[Bucket], cost,
                                np.array([f.work for f in flows]),
                                np.array([f.latency for f in flows])),
                 fault_seed, stream, job=job) or None
+        if link is not None and flows:
+            retx = retx_events(
+                link, sum(op.size for op in plan.ops),
+                _fault_horizon(np.array([f.ready for f in flows]),
+                               np.array([f.work for f in flows]),
+                               np.array([f.latency for f in flows])),
+                fault_seed, stream, job=job)
+            if retx:
+                churn = list(churn or ()) + retx
         if fabric_path:
             flows = [f._replace(path=fabric_path) for f in flows]
             results = run_flows(flows, capacities=capacities, churn=churn)
@@ -462,7 +489,8 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
              fault_model: str = "none", churn_rate: float = 0.0,
              worker_bw_skew: float = 0.0, fault_seed: int = 0,
              fabric: str = "none",
-             oversubscription: float = 1.0) -> SimResult:
+             oversubscription: float = 1.0,
+             link_profile: str | LinkProfile = "none") -> SimResult:
     """Run the two-process simulation for one iteration.
 
     ``bandwidth`` in bytes/s.  ``transport`` maps physical to effective
@@ -501,6 +529,14 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
     the bottleneck max-min fair share.  ``fabric="none"`` — and any
     fabric whose uplink can never bind, e.g. ``clos`` at 1:1 — is
     *bitwise* identical to the flat single-link topology.
+
+    ``link_profile`` (``"none"`` |
+    ``"wan:loss=p,rtt=ms[:timeout=ms,backoff=x]"`` | a
+    :class:`~repro.core.transport.LinkProfile`) turns on the lossy-link
+    axis: wire work inflates by ``1/(1-loss)``, the RTT joins the fixed
+    latency, and seeded retransmission-timeout stalls (substream ``(4,)``
+    of ``fault_seed``) ride the engine's ``_RETX`` calendar.  The null
+    profile is *bitwise* identical to the clean-link build.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -516,6 +552,8 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
                            bw_skew=worker_bw_skew)
     fault = None if fm.is_null else fm
     fab = resolve_fabric(fabric, oversubscription)
+    lp = parse_link_profile(link_profile)
+    lpr = None if lp.is_null else lp
     fpath = fab.path(topology) if fab is not None else ()
     fcaps = fab.capacities() if fab is not None else None
     if len(fpath) > 1 and n_rails > 1:
@@ -548,7 +586,8 @@ def simulate(timeline: GradTimeline, *, n_workers: int, bandwidth: float,
                                        codecs=codecs, fault=fault,
                                        fault_seed=fault_seed,
                                        n_workers=n_workers,
-                                       path=fpath, capacities=fcaps)
+                                       path=fpath, capacities=fcaps,
+                                       link=lpr)
 
     if not served:
         t_sync = timeline.t_back
@@ -593,7 +632,9 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                         worker_bw_skew: float = 0.0,
                         fault_seed: int = 0,
                         fabric: str = "none",
-                        oversubscription: float = 1.0) -> List[SimResult]:
+                        oversubscription: float = 1.0,
+                        link_profile: str | LinkProfile = "none"
+                        ) -> List[SimResult]:
     """Multiple jobs sharing one physical link (fair-share contention).
 
     Each timeline is an independent training job running the same ring
@@ -619,6 +660,11 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     same racks contend for the uplink too, and the engine's max-min solve
     arbitrates both links at once.  ``fabric="none"`` and the elided 1:1
     case stay bitwise identical to the flat shared link.
+
+    ``link_profile`` (see :func:`simulate`) degrades the shared link for
+    every job at once: the deterministic pricing rides the shared
+    lowering (so relabeled clones stay bit-identical to fresh lowerings)
+    and each job draws its own RTO stalls from fault stream ``j``.
     """
     comm = comm or CommConfig()
     addest = addest or AddEst.v100()
@@ -633,6 +679,8 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
     fm = parse_fault_model(fault_model, churn_rate=churn_rate,
                            bw_skew=worker_bw_skew)
     fault = None if fm.is_null else fm
+    lp = parse_link_profile(link_profile)
+    lpr = None if lp.is_null else lp
     fab = resolve_fabric(fabric, oversubscription)
     fpath = fab.path("ring") if fab is not None else ()
     if len(fpath) <= 1:
@@ -688,7 +736,8 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                 got[3] = plan_to_flow_batch(got[1], cost,
                                             tr.per_tensor_overhead,
                                             op_id_base=0, n_rails=n_rails,
-                                            codecs=got[2])
+                                            codecs=got[2],
+                                            link_profile=lpr)
             bj = got[3].relabel(base, f"job{j}")
             if jitter > 0.0:
                 bj = perturb_batch(bj, jitter, jitter_seed, stream=j)
@@ -699,6 +748,11 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                                         fault_seed, j)
                 churn_all.extend(churn_events(
                     fault, n_workers,
+                    _fault_horizon(bj.ready, bj.work, bj.latency),
+                    fault_seed, j, job=f"job{j}"))
+            if lpr is not None and bj.n:
+                churn_all.extend(retx_events(
+                    lpr, sum(op.size for op in got[1].ops),
                     _fault_horizon(bj.ready, bj.work, bj.latency),
                     fault_seed, j, job=f"job{j}"))
             base += bj.n
@@ -717,7 +771,7 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
             if got[3] is None:
                 got[3] = plan_to_flows(got[1], cost, tr.per_tensor_overhead,
                                        op_id_base=0, n_rails=n_rails,
-                                       codecs=got[2])
+                                       codecs=got[2], link_profile=lpr)
             flows = clone_flows(got[3], base, f"job{j}")
             if jitter > 0.0:
                 flows = perturb_flows(flows, jitter, jitter_seed, stream=j)
@@ -728,6 +782,13 @@ def simulate_contention(timelines: Sequence[GradTimeline], *, n_workers: int,
                                            fault_seed, j)
                 churn_all.extend(churn_events(
                     fault, n_workers,
+                    _fault_horizon(np.array([f.ready for f in flows]),
+                                   np.array([f.work for f in flows]),
+                                   np.array([f.latency for f in flows])),
+                    fault_seed, j, job=f"job{j}"))
+            if lpr is not None and flows:
+                churn_all.extend(retx_events(
+                    lpr, sum(op.size for op in got[1].ops),
                     _fault_horizon(np.array([f.ready for f in flows]),
                                    np.array([f.work for f in flows]),
                                    np.array([f.latency for f in flows])),

@@ -66,12 +66,12 @@ def _cells(spec) -> Dict[tuple, Dict]:
 def _k(model, servers, bw, transport, ratio=1.0, topo="ring", sched="fifo",
        n_jobs=1, n_rails=1, jitter_ms=0.0, codec="none", fault_model="none",
        churn_rate=0.0, worker_bw_skew=0.0, fabric="none",
-       oversubscription=1.0):
+       oversubscription=1.0, link_profile="none"):
     """An ``index_cells`` key in CELL_AXES order, with trailing-axis
     defaults — figure builders only name the axes their sweep varies."""
     return (model, servers, bw, transport, ratio, topo, sched, n_jobs,
             n_rails, jitter_ms, codec, fault_model, churn_rate,
-            worker_bw_skew, fabric, oversubscription)
+            worker_bw_skew, fabric, oversubscription, link_profile)
 
 def fig1_scaling_vs_servers(models: Optional[Sequence[str]] = None,
                             servers: Optional[Sequence[int]] = None,
@@ -462,6 +462,48 @@ def fig15_fabric_oversubscription(models: Optional[Sequence[str]] = None,
                     row[f"oversub{ov:g}_retention"] = (
                         c["scaling_factor"] / base["scaling_factor"])
                 out.append(row)
+    return out
+
+
+def fig16_wan_loss_regimes(bws: Optional[Sequence[float]] = None,
+                           schedulers: Optional[Sequence[str]] = None
+                           ) -> List[Dict]:
+    """Lossy-transport what-if: the paper's compression verdict re-derived
+    under WAN loss.  Fig 8 concludes 2x-5x compression suffices at
+    datacenter bandwidths — but its clean fluid link is exactly what the
+    follow-up literature (Agarwal et al., Han et al.) shows is decisive:
+    the utility judgment flips with the transport regime.  Rows come from
+    the registered ``wan`` grid (the sweep the ``wan_suite`` golden
+    artifact gates in CI): per (bandwidth, scheduler, loss profile) the
+    int8 codec's t_sync against its codec=none twin.  On a lossy link
+    every saved wire byte is saved ``1/(1-loss)`` times *and* shrinks the
+    retransmission-stall exposure, so the compression-wins region only
+    widens as loss grows — the regime boundary the grid's
+    ``compression_wins_region_widens_with_loss`` validator pins."""
+    spec = _grid("wan",
+                 **({} if bws is None
+                    else dict(bandwidth_gbps=tuple(float(b) for b in bws))),
+                 **({} if schedulers is None
+                    else dict(scheduler=tuple(schedulers))))
+    ix = _cells(spec)
+    n, tr, m = spec.n_servers[0], spec.transport[0], spec.models[0]
+    # the loss ladder: clean link + the fixed-rtt profiles (the backoff
+    # variants probe the stall model, not the compression regime)
+    ladder = [p for p in spec.link_profile if "timeout" not in p]
+    out = []
+    for bw in spec.bandwidth_gbps:
+        for s in spec.scheduler:
+            for lp in ladder:
+                base = ix[_k(m, n, bw, tr, sched=s, link_profile=lp)]
+                comp = ix[_k(m, n, bw, tr, sched=s, codec="int8",
+                             link_profile=lp)]
+                out.append(dict(
+                    model=m, bandwidth_gbps=bw, scheduler=s,
+                    link_profile=lp,
+                    t_sync_none=base["t_sync"],
+                    t_sync_int8=comp["t_sync"],
+                    int8_speedup=base["t_sync"] / max(comp["t_sync"], 1e-12),
+                    compression_wins=comp["t_sync"] < base["t_sync"]))
     return out
 
 

@@ -8,6 +8,8 @@ the property the golden-artifact CI gate relies on.
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -37,8 +39,22 @@ def write(path: PathLike, experiments: Sequence[Dict],
     p = Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     # sort_keys + fixed separators => canonical bytes; json floats use
-    # repr() which round-trips IEEE doubles exactly
-    p.write_text(json.dumps(art, sort_keys=True, indent=1) + "\n")
+    # repr() which round-trips IEEE doubles exactly.  Written to a temp
+    # file in the same directory and renamed into place: a crashed or
+    # colliding writer can never leave a truncated file that read() (and
+    # hence compare) would mistake for a complete artifact.
+    fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=p.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            fh.write(json.dumps(art, sort_keys=True, indent=1) + "\n")
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return art
 
 

@@ -28,14 +28,26 @@ from repro.experiments.spec import CELL_AXES, axis_value
 def _cmd_run(args: argparse.Namespace) -> int:
     specs = grids.resolve(args.grid)
     out = Path(args.out or f"artifacts/experiments/{args.grid}.json")
+    journal_dir = args.journal
+    if args.resume and journal_dir is None:
+        raise SystemExit("--resume needs --journal DIR (the journal to "
+                         "replay)")
     experiments = run_suite(specs, executor=args.executor,
-                            max_workers=args.jobs)
+                            max_workers=args.jobs,
+                            journal_dir=journal_dir, resume=args.resume,
+                            cell_timeout=args.cell_timeout,
+                            retries=args.retries)
     artifacts.write(out, experiments, meta={"grid": args.grid,
                                             "engine_version": ENGINE_VERSION})
     n_cells = sum(len(e["cells"]) for e in experiments)
+    n_failed_cells = sum(1 for e in experiments
+                         for c in e["cells"] if c.get("failed"))
     failed = [f"{e['name']}:{k}" for e in experiments
               for k, v in e["validations"].items() if not v]
     print(f"wrote {out} ({len(experiments)} experiment(s), {n_cells} cells)")
+    if n_failed_cells:
+        print(f"WARNING: {n_failed_cells} cell(s) exhausted retries and "
+              f"were recorded with failure metadata")
     if failed:
         print("FAILED paper-claim checks: " + ", ".join(failed))
         return 1
@@ -124,6 +136,21 @@ def build_parser() -> argparse.ArgumentParser:
                         "are GIL-bound on threads); serial for debugging")
     p.add_argument("--jobs", type=int, default=None,
                    help="max workers for the executor")
+    p.add_argument("--journal", metavar="DIR", default=None,
+                   help="crash-safe journal directory: every completed "
+                        "cell is flushed to DIR/<grid>.jsonl as it lands")
+    p.add_argument("--resume", action="store_true",
+                   help="replay the journal and re-run only missing/failed "
+                        "cells; the artifact is byte-identical to a "
+                        "single-shot run")
+    p.add_argument("--cell-timeout", type=float, default=None,
+                   metavar="SECONDS", dest="cell_timeout",
+                   help="per-cell wall-clock budget (process pool): a "
+                        "wedged cell is killed and retried")
+    p.add_argument("--retries", type=int, default=0,
+                   help="re-attempts per failed/timed-out cell (with "
+                        "exponential backoff); an exhausted cell is "
+                        "recorded with failure metadata, not fatal")
     p.set_defaults(fn=_cmd_run)
 
     p = sub.add_parser("compare", help="diff two artifacts (regression gate)")

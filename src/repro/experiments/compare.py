@@ -74,6 +74,20 @@ def _compare_cells(name: str, old: Sequence[Dict], new: Sequence[Dict],
     for key in sorted(old_ix.keys() & new_ix.keys(), key=str):
         a, b = old_ix[key], new_ix[key]
         report.n_cells += 1
+        # hardened sweeps record retry-exhausted cells with failure
+        # metadata instead of numerics: a new-side failure where the old
+        # artifact has real numbers is a regression; an old-side failure
+        # has nothing to diff against, so skip-and-report
+        if b.get("failed") and not a.get("failed"):
+            report.violations.append(Violation(
+                name, "cells", str(key),
+                f"cell failed in new artifact: {b.get('error', '?')}"))
+            continue
+        if a.get("failed"):
+            report.notes.append(
+                f"[{name}] {key}: old-side cell failed "
+                f"({a.get('error', '?')}); numerics skipped")
+            continue
         if a.get("n_buckets") != b.get("n_buckets"):
             report.violations.append(Violation(
                 name, "field", f"{key}.n_buckets",

@@ -189,6 +189,32 @@ _register(ExperimentSpec(
     topology=("ring", "tree", "hierarchical"),
     fabric=("clos",), oversubscription=(1.0, 2.0, 4.0)))
 
+# WAN / lossy-link axes (the tentpole of the lossy-transport engine): the
+# transport-regime territory the Agarwal et al. and Han et al. follow-ups
+# show flips end-to-end utility judgments.  link_profile prices Bernoulli
+# segment loss two ways: deterministically (wire work inflates by
+# 1/(1-loss), RTT joins the post-wire latency) and stochastically (seeded
+# RTO stalls of timeout * backoff^k riding the _RETX calendar kind).  The
+# gated claims: link_profile="none" cells are *bitwise* plain simulate
+# (the null profile never touches a flow); t_sync is monotone
+# non-decreasing in loss at fixed rtt (thinning keeps a loss-superset of
+# the same timed events); stalls are monotone in the backoff multiplier
+# at fixed timeout; and the compression-wins region (int8 beating its
+# codec=none twin on t_sync) only widens as loss grows — lost bytes are
+# retransmitted bytes, so compression pays double under loss.  Gated by
+# artifacts/golden/wan_suite.json in CI (fig16 renders the regime map).
+_register(ExperimentSpec(
+    name="wan", models=("resnet50",), n_servers=(8,),
+    bandwidth_gbps=(1.0, 10.0), transport=("horovod_tcp",),
+    scheduler=("fifo", "priority"), sched_chunks=8,
+    codec=("none", "int8"), fault_seed=2029,
+    link_profile=("none",
+                  "wan:loss=0.001,rtt=20",
+                  "wan:loss=0.01,rtt=20",
+                  "wan:loss=0.05,rtt=20",
+                  "wan:loss=0.01,rtt=20:timeout=100,backoff=1",
+                  "wan:loss=0.01,rtt=20:timeout=100,backoff=4")))
+
 # Suites: ordered grid groups runnable/comparable as one artifact.
 SUITES: Dict[str, Tuple[str, ...]] = {
     "paper": ("paper-fig1", "paper-fig3", "paper-fig4", "paper-fig6",
@@ -200,6 +226,7 @@ SUITES: Dict[str, Tuple[str, ...]] = {
     "compression": ("compression",),
     "churn": ("churn",),
     "fabric": ("fabric",),
+    "wan": ("wan",),
 }
 
 

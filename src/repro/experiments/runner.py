@@ -21,13 +21,27 @@ Process pools have two per-worker costs this module amortizes:
   the spec names exactly once per process instead of once per cell;
 - cells are submitted in :data:`CELLS_PER_TASK`-sized batches so argument
   pickling and future bookkeeping are paid per batch, not per cell.
+
+Hardened mode (any of ``journal`` / ``resume`` / ``cell_timeout`` /
+``retries`` set) trades the batched fast path for crash-safety: every
+completed cell is flushed to a JSONL journal as it lands, a wedged cell is
+killed at its wall-clock budget and retried with exponential backoff, a
+cell that exhausts its retries is *recorded* with failure metadata instead
+of aborting the sweep, and ``resume=True`` replays the journal — re-running
+only missing/failed cells — to an artifact byte-identical to a single-shot
+run (cells are assembled in ``spec.expand()`` index order either way).
+With none of those knobs set, the historical code path runs untouched.
 """
 from __future__ import annotations
 
+import json
+import multiprocessing
 import os
+import time
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.addest import AddEst
 from repro.core.simulator import simulate, simulate_contention
@@ -43,6 +57,15 @@ ENGINE_VERSION = 1
 PROCESS_THRESHOLD = 64
 # cells per process-pool task: amortizes pickling without starving workers
 CELLS_PER_TASK = 8
+
+# crash-safe journal identity (validated on --resume so a journal written
+# by a different grid can never silently seed another sweep's artifact)
+JOURNAL_KIND = "repro-journal"
+JOURNAL_SCHEMA_VERSION = 1
+# base of the round-level exponential retry backoff (seconds); bounded so
+# a sweep with many flaky cells degrades in minutes, not hours
+_RETRY_BACKOFF_S = 0.05
+_RETRY_BACKOFF_MAX_S = 2.0
 
 _ADDEST = {"v100": AddEst.v100, "tpu_v5e": AddEst.tpu_v5e}
 
@@ -82,7 +105,10 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
     cells' code path (and bits) untouched.  ``fabric``/``oversubscription``
     lower the cell onto NIC -> ToR-uplink paths (:mod:`repro.core.fabric`)
     priced at the engine's max-min fair share; ``fabric="none"`` (and the
-    elided 1:1 case) is bitwise the flat link.
+    elided 1:1 case) is bitwise the flat link.  ``link_profile`` prices a
+    lossy WAN link (:mod:`repro.core.transport`): retransmission wire
+    inflation + RTT deterministically, seeded RTO stalls stochastically
+    (drawn from ``spec.fault_seed``); ``"none"`` is bitwise the clean link.
     """
     kwargs = dict(
         n_workers=cell.n_servers * spec.gpus_per_server,
@@ -103,6 +129,7 @@ def run_cell(spec: ExperimentSpec, cell: Cell) -> Dict:
         fault_seed=spec.fault_seed,
         fabric=cell.fabric,
         oversubscription=cell.oversubscription,
+        link_profile=cell.link_profile,
         comm=CommConfig(fusion_buffer_mb=spec.fusion_buffer_mb,
                         timeout_ms=spec.timeout_ms),
         addest=_ADDEST[spec.addest]())
@@ -156,11 +183,249 @@ def _batches(items: Sequence, size: int) -> List[Sequence]:
     return [items[i:i + size] for i in range(0, len(items), size)]
 
 
+# -- hardened path: journal / resume / timeout / retry -----------------------
+
+def _failure_record(cell: Cell, error: str) -> Dict:
+    """Graceful degradation: the cell's identity plus failure metadata,
+    shaped so ``index_cells`` still indexes it and ``validate``/``compare``
+    can skip-and-report instead of crashing on missing numerics."""
+    d = cell.to_dict()
+    d["failed"] = True
+    d["error"] = error
+    return d
+
+
+def _journal_append(fh, index: int, record: Dict) -> None:
+    fh.write(json.dumps({"index": index, "cell": record},
+                        sort_keys=True) + "\n")
+    fh.flush()  # past the user-space buffer: SIGKILL loses at most one line
+
+
+def _load_journal(path: Union[str, Path],
+                  spec: ExperimentSpec) -> Dict[int, Dict]:
+    """Replay a journal -> {expand() index: completed cell record}.
+
+    Tolerates a truncated final line (the crash boundary); refuses a
+    journal whose header names a different grid.  Failed cells are
+    *dropped* so ``--resume`` re-runs them."""
+    done: Dict[int, Dict] = {}
+    p = Path(path)
+    if not p.exists():
+        return done
+    with p.open() as fh:
+        header = None
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                break  # torn tail from a mid-write kill: keep what precedes
+            if header is None:
+                header = d
+                if (d.get("kind") != JOURNAL_KIND
+                        or d.get("schema_version") != JOURNAL_SCHEMA_VERSION):
+                    raise ValueError(f"{p} is not a sweep journal")
+                if d.get("spec_hash") != spec.spec_hash():
+                    raise ValueError(
+                        f"journal {p} was written by spec "
+                        f"{d.get('spec_hash')!r}, not {spec.spec_hash()!r} "
+                        f"({spec.name}) — refusing to resume across grids")
+                continue
+            rec = d.get("cell", {})
+            if rec.get("failed"):
+                continue
+            done[int(d["index"])] = rec
+    return done
+
+
+def _run_hardened_serial(spec: ExperimentSpec, pending: Dict[int, Cell], *,
+                         retries: int, jfh) -> Dict[int, Dict]:
+    out: Dict[int, Dict] = {}
+    for i in sorted(pending):
+        cell, rec, err = pending[i], None, ""
+        for attempt in range(retries + 1):
+            try:
+                rec = run_cell(spec, cell)
+                break
+            except Exception as e:  # noqa: BLE001 — degrade, don't abort
+                err = f"{type(e).__name__}: {e}"
+                if attempt < retries:
+                    time.sleep(min(_RETRY_BACKOFF_S * 2.0 ** attempt,
+                                   _RETRY_BACKOFF_MAX_S))
+        if rec is None:
+            rec = _failure_record(cell, err)
+        out[i] = rec
+        if jfh is not None:
+            _journal_append(jfh, i, rec)
+    return out
+
+
+def _run_hardened_process(spec: ExperimentSpec, pending: Dict[int, Cell], *,
+                          max_workers: Optional[int],
+                          cell_timeout: Optional[float],
+                          retries: int, jfh) -> Dict[int, Dict]:
+    """Round-based pool execution with per-cell wall-clock budgets.
+
+    Each round submits every still-pending cell via ``apply_async`` and
+    collects in index order.  A cell that blows ``cell_timeout`` cannot be
+    recalled from its worker, so the round charges it one attempt,
+    harvests whatever later cells already finished, terminates the pool,
+    and loops; a worker exception likewise burns an attempt.  Every round
+    either drains cells or charges attempts (which are capped), so the
+    sweep always terminates — exhausted cells land as failure records."""
+    spec_d = spec.to_dict()
+    out: Dict[int, Dict] = {}
+    attempts = dict.fromkeys(pending, 0)
+    left = dict(pending)
+    rnd = 0
+    while left:
+        order = sorted(left)
+        workers = max_workers or min(len(order), os.cpu_count() or 1)
+        pool = multiprocessing.Pool(processes=workers,
+                                    initializer=_warm_timelines,
+                                    initargs=(tuple(spec.models),))
+        harvested: Dict[int, tuple] = {}
+        timed_out = None
+        try:
+            asyncs = {i: pool.apply_async(_run_cell_from_dicts,
+                                          (spec_d, left[i].to_dict()))
+                      for i in order}
+            for pos, i in enumerate(order):
+                try:
+                    harvested[i] = ("ok", asyncs[i].get(cell_timeout))
+                except multiprocessing.TimeoutError:
+                    timed_out = i
+                    for j in order[pos + 1:]:
+                        if asyncs[j].ready():
+                            try:
+                                harvested[j] = ("ok", asyncs[j].get(0))
+                            except Exception as e:  # noqa: BLE001
+                                harvested[j] = (
+                                    "err", f"{type(e).__name__}: {e}")
+                    break
+                except Exception as e:  # noqa: BLE001
+                    harvested[i] = ("err", f"{type(e).__name__}: {e}")
+        finally:
+            pool.terminate()  # also the close() path: nothing left queued
+            pool.join()
+
+        charged = False
+        if timed_out is not None:
+            attempts[timed_out] += 1
+            charged = True
+            if attempts[timed_out] > retries:
+                rec = _failure_record(
+                    left[timed_out],
+                    f"TimeoutError: cell exceeded {cell_timeout}s wall "
+                    f"clock ({attempts[timed_out]} attempts)")
+                out[timed_out] = rec
+                del left[timed_out]
+                if jfh is not None:
+                    _journal_append(jfh, timed_out, rec)
+        for i, (kind, val) in sorted(harvested.items()):
+            if kind == "ok":
+                out[i] = val
+                del left[i]
+                if jfh is not None:
+                    _journal_append(jfh, i, val)
+            else:
+                attempts[i] += 1
+                charged = True
+                if attempts[i] > retries:
+                    rec = _failure_record(left[i], val)
+                    out[i] = rec
+                    del left[i]
+                    if jfh is not None:
+                        _journal_append(jfh, i, rec)
+        if charged and left:
+            time.sleep(min(_RETRY_BACKOFF_S * 2.0 ** rnd,
+                           _RETRY_BACKOFF_MAX_S))
+        rnd += 1
+    return out
+
+
+def _run_hardened(spec: ExperimentSpec, cells: Sequence[Cell], *, mode: str,
+                  max_workers: Optional[int],
+                  journal: Optional[Union[str, Path]], resume: bool,
+                  cell_timeout: Optional[float],
+                  retries: int) -> List[Dict]:
+    done: Dict[int, Dict] = {}
+    jpath = Path(journal) if journal is not None else None
+    if resume:
+        if jpath is None:
+            raise ValueError("resume=True needs a journal path")
+        done = _load_journal(jpath, spec)
+    jfh = None
+    if jpath is not None:
+        jpath.parent.mkdir(parents=True, exist_ok=True)
+        # rewrite-from-scratch on every run: drops any torn tail line and
+        # the failed entries being re-run, so the journal is always a clean
+        # prefix of the final artifact
+        jfh = jpath.open("w")
+        jfh.write(json.dumps(
+            {"kind": JOURNAL_KIND,
+             "schema_version": JOURNAL_SCHEMA_VERSION,
+             "name": spec.name, "spec_hash": spec.spec_hash()},
+            sort_keys=True) + "\n")
+        jfh.flush()
+        for i in sorted(done):
+            _journal_append(jfh, i, done[i])
+    pending = {i: c for i, c in enumerate(cells) if i not in done}
+    try:
+        if not pending:
+            fresh: Dict[int, Dict] = {}
+        elif mode == "process":
+            fresh = _run_hardened_process(
+                spec, pending, max_workers=max_workers,
+                cell_timeout=cell_timeout, retries=retries, jfh=jfh)
+        else:
+            # thread mode degenerates to serial here: a wedged thread
+            # cannot be recalled, and retry bookkeeping wants one owner
+            fresh = _run_hardened_serial(spec, pending, retries=retries,
+                                         jfh=jfh)
+    finally:
+        if jfh is not None:
+            jfh.close()
+    done.update(fresh)
+    return [done[i] for i in range(len(cells))]
+
+
 def run_spec(spec: ExperimentSpec, *, executor: str = "auto",
-             max_workers: Optional[int] = None) -> Dict:
-    """Expand and run one grid; returns the experiment record."""
+             max_workers: Optional[int] = None,
+             journal: Optional[Union[str, Path]] = None,
+             resume: bool = False,
+             cell_timeout: Optional[float] = None,
+             retries: int = 0) -> Dict:
+    """Expand and run one grid; returns the experiment record.
+
+    ``journal`` (a JSONL path) flushes every completed cell as it lands;
+    ``resume=True`` replays that journal and re-runs only missing/failed
+    cells — the assembled record is byte-identical to a single-shot run.
+    ``cell_timeout`` (seconds, process pool only) bounds each cell's wall
+    clock; ``retries`` bounds re-attempts per cell, with exponential
+    backoff between rounds.  A cell that exhausts its retries is recorded
+    with ``{"failed": true, "error": ...}`` instead of aborting the sweep.
+    All four default off, leaving the historical path byte-untouched."""
     cells = spec.expand()
     mode = resolve_executor(executor, len(cells), spec.workload_units)
+    hardened = (journal is not None or resume
+                or cell_timeout is not None or retries > 0)
+    if hardened:
+        results = _run_hardened(
+            spec, cells, mode=mode, max_workers=max_workers,
+            journal=journal, resume=resume, cell_timeout=cell_timeout,
+            retries=retries)
+        from repro.experiments.validations import validate
+        return {
+            "name": spec.name,
+            "engine_version": ENGINE_VERSION,
+            "spec": spec.to_dict(),
+            "spec_hash": spec.spec_hash(),
+            "cells": results,
+            "validations": validate(spec.name, results),
+        }
     if mode == "serial" or len(cells) <= 1:
         results = [run_cell(spec, c) for c in cells]
     elif mode == "process":
@@ -193,9 +458,21 @@ def run_spec(spec: ExperimentSpec, *, executor: str = "auto",
 
 
 def run_suite(specs: Sequence[ExperimentSpec], *, executor: str = "auto",
-              max_workers: Optional[int] = None) -> List[Dict]:
-    return [run_spec(s, executor=executor, max_workers=max_workers)
-            for s in specs]
+              max_workers: Optional[int] = None,
+              journal_dir: Optional[Union[str, Path]] = None,
+              resume: bool = False,
+              cell_timeout: Optional[float] = None,
+              retries: int = 0) -> List[Dict]:
+    """Run several grids; ``journal_dir`` keeps one journal per spec
+    (``<dir>/<name>.jsonl``), which is what ``--resume`` replays."""
+    out = []
+    for s in specs:
+        journal = (Path(journal_dir) / f"{s.name}.jsonl"
+                   if journal_dir is not None else None)
+        out.append(run_spec(s, executor=executor, max_workers=max_workers,
+                            journal=journal, resume=resume,
+                            cell_timeout=cell_timeout, retries=retries))
+    return out
 
 
 def index_cells(cells: Sequence[Dict]) -> Dict[tuple, Dict]:

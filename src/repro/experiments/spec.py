@@ -23,12 +23,13 @@ SPEC_VERSION = 1
 CELL_AXES = ("model", "n_servers", "bandwidth_gbps", "transport",
              "compression_ratio", "topology", "scheduler", "n_jobs",
              "n_rails", "jitter_ms", "codec", "fault_model", "churn_rate",
-             "worker_bw_skew", "fabric", "oversubscription")
+             "worker_bw_skew", "fabric", "oversubscription", "link_profile")
 
 AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
                  "jitter_ms": 0.0, "codec": "none", "fault_model": "none",
                  "churn_rate": 0.0, "worker_bw_skew": 0.0,
-                 "fabric": "none", "oversubscription": 1.0}
+                 "fabric": "none", "oversubscription": 1.0,
+                 "link_profile": "none"}
 
 # axes added after the first golden artifacts shipped: omitted from
 # serialized cells/specs while at their default, so pre-axis artifacts stay
@@ -37,7 +38,8 @@ AXIS_DEFAULTS = {"scheduler": "fifo", "n_jobs": 1, "n_rails": 1,
 _ELIDED_AT_DEFAULT = {"n_jobs": 1, "n_rails": 1, "jitter_ms": 0.0,
                       "codec": "none", "fault_model": "none",
                       "churn_rate": 0.0, "worker_bw_skew": 0.0,
-                      "fabric": "none", "oversubscription": 1.0}
+                      "fabric": "none", "oversubscription": 1.0,
+                      "link_profile": "none"}
 
 
 def axis_value(cell: Dict, axis: str):
@@ -71,6 +73,7 @@ class Cell:
     worker_bw_skew: float = 0.0     # per-worker bandwidth asymmetry scale
     fabric: str = "none"            # datacenter fabric (core.fabric)
     oversubscription: float = 1.0   # ToR uplink oversubscription ratio
+    link_profile: str = "none"      # lossy-link regime (core.transport)
 
     def key(self) -> Tuple:
         return tuple(getattr(self, a) for a in CELL_AXES)
@@ -120,6 +123,7 @@ class ExperimentSpec:
     worker_bw_skew: Tuple[float, ...] = (0.0,)  # asymmetric-bw axis
     fabric: Tuple[str, ...] = ("none",)     # fabric axis (core.fabric)
     oversubscription: Tuple[float, ...] = (1.0,)    # ToR uplink oversub
+    link_profile: Tuple[str, ...] = ("none",)   # lossy-link axis (transport)
     gpus_per_server: int = 8            # p3dn.24xlarge
     addest: str = "v100"                # v100 | tpu_v5e
     fusion_buffer_mb: float = 64.0      # paper's fusion buffer
@@ -139,7 +143,8 @@ class ExperimentSpec:
                       ("error_feedback", False), ("fault_model", ("none",)),
                       ("churn_rate", (0.0,)), ("worker_bw_skew", (0.0,)),
                       ("fault_seed", 0), ("fabric", ("none",)),
-                      ("oversubscription", (1.0,)))
+                      ("oversubscription", (1.0,)),
+                      ("link_profile", ("none",)))
 
     def __post_init__(self):
         # tolerate lists (e.g. straight from JSON) by freezing to tuples
@@ -147,7 +152,7 @@ class ExperimentSpec:
                   "compression_ratio", "topology", "scheduler", "n_jobs",
                   "n_rails", "jitter_ms", "codec", "fault_model",
                   "churn_rate", "worker_bw_skew", "fabric",
-                  "oversubscription"):
+                  "oversubscription", "link_profile"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -158,9 +163,9 @@ class ExperimentSpec:
         """Cartesian product in stable axis order (model outermost)."""
         return tuple(Cell(m, int(n), float(bw), t, float(r), topo, s, int(j),
                           int(nr), float(jm), cd, fml, float(cr), float(sk),
-                          fb, float(ov))
+                          fb, float(ov), lp)
                      for m, n, bw, t, r, topo, s, j, nr, jm, cd, fml, cr, sk,
-                     fb, ov
+                     fb, ov, lp
                      in product(
                          self.models, self.n_servers, self.bandwidth_gbps,
                          self.transport, self.compression_ratio,
@@ -168,7 +173,7 @@ class ExperimentSpec:
                          self.n_rails, self.jitter_ms, self.codec,
                          self.fault_model, self.churn_rate,
                          self.worker_bw_skew, self.fabric,
-                         self.oversubscription))
+                         self.oversubscription, self.link_profile))
 
     @property
     def n_cells(self) -> int:
@@ -179,7 +184,8 @@ class ExperimentSpec:
                 * len(self.n_rails) * len(self.jitter_ms)
                 * len(self.codec) * len(self.fault_model)
                 * len(self.churn_rate) * len(self.worker_bw_skew)
-                * len(self.fabric) * len(self.oversubscription))
+                * len(self.fabric) * len(self.oversubscription)
+                * len(self.link_profile))
 
     @property
     def workload_units(self) -> int:

@@ -497,6 +497,84 @@ def _fabric(cells: Sequence[Dict]) -> Check:
             "hierarchical_overhead_le_ring_at_4to1": hier_ok}
 
 
+def _wan(cells: Sequence[Dict]) -> Check:
+    """The lossy-transport claims the wan golden suite gates.
+
+    - a ``link_profile="none"`` cell is *bitwise* identical to a
+      ``simulate`` call that never heard of the axis — the null profile
+      returns the untouched flow objects and draws no retx events;
+    - t_sync is monotone non-decreasing in the loss axis at fixed rtt:
+      the deterministic wire inflation 1/(1-loss) grows with loss, and
+      the retx thinning gate keeps a loss-*superset* of the same timed
+      candidate events (see :func:`repro.core.transport.retx_events`);
+    - stalls are monotone in the backoff multiplier at fixed timeout
+      (``backoff=1 <= backoff=4``): the event set is identical, only
+      ``timeout * backoff**k`` scales;
+    - the compression-wins region only *widens* with loss: lost bytes
+      are retransmitted bytes, so every wire byte a codec saves is
+      saved ``1/(1-loss)`` times — the count of (bandwidth, scheduler)
+      points where int8 beats its codec=none twin on t_sync is
+      non-decreasing along the loss ladder;
+    - the lossiest cell replays bit-exact through a direct ``simulate``
+      call with the same ``link_profile``/``fault_seed`` (the
+      determinism contract: draws depend only on ``(seed, stream, n)``).
+    """
+    from repro.experiments.spec import axis_value
+    by = {(c["model"], c["bandwidth_gbps"], c["scheduler"],
+           axis_value(c, "codec"), axis_value(c, "link_profile")): c
+          for c in cells}
+    ts = {k: c["t_sync"] for k, c in by.items()}
+    # the loss ladder at fixed rtt, clean link first
+    ladder = ("none",
+              "wan:loss=0.001,rtt=20",
+              "wan:loss=0.01,rtt=20",
+              "wan:loss=0.05,rtt=20")
+    mono_loss = all(
+        ts[(m, bw, s, cd, a)] <= ts[(m, bw, s, cd, b)] + 1e-9
+        for (m, bw, s, cd, lp) in by if lp == "none"
+        for a, b in zip(ladder, ladder[1:]))
+    b1 = "wan:loss=0.01,rtt=20:timeout=100,backoff=1"
+    b4 = "wan:loss=0.01,rtt=20:timeout=100,backoff=4"
+    mono_backoff = all(
+        ts[(m, bw, s, cd, b1)] <= ts[(m, bw, s, cd, b4)] + 1e-9
+        for (m, bw, s, cd, lp) in by if lp == b1)
+
+    def wins(profile: str) -> int:
+        return sum(1 for (m, bw, s, cd, lp) in by
+                   if cd == "none" and lp == profile
+                   and ts[(m, bw, s, "int8", lp)]
+                   < ts[(m, bw, s, "none", lp)] - 1e-12)
+
+    w = [wins(p) for p in ladder]
+    wins_widen = all(a <= b for a, b in zip(w, w[1:]))
+
+    from repro.core.simulator import simulate
+    from repro.core.timeline import from_cnn
+    from repro.core.transport import GBPS
+    clean = [c for c in cells if axis_value(c, "link_profile") == "none"
+             and axis_value(c, "codec") == "none"]
+    exact = all(simulate(from_cnn(c["model"]), n_workers=c["n_workers"],
+                         bandwidth=c["bandwidth_gbps"] * GBPS,
+                         transport=c["transport"], scheduler=c["scheduler"],
+                         n_chunks=8).t_sync == c["t_sync"]
+                for c in clean)
+    # fault_seed=2029 is the registered wan grid's seed (grids.py), same
+    # convention as _churn hardcoding its grid's seed and n_chunks
+    hot = by[("resnet50", 10.0, "priority", "int8",
+              "wan:loss=0.05,rtt=20")]
+    replay = simulate(from_cnn("resnet50"), n_workers=hot["n_workers"],
+                      bandwidth=hot["bandwidth_gbps"] * GBPS,
+                      transport=hot["transport"], scheduler="priority",
+                      n_chunks=8, codec="int8", fault_seed=2029,
+                      link_profile="wan:loss=0.05,rtt=20"
+                      ).t_sync == hot["t_sync"]
+    return {"zero_loss_matches_simulate_bitwise": exact,
+            "t_sync_monotone_in_loss": mono_loss,
+            "stalls_monotone_in_backoff": mono_backoff,
+            "compression_wins_region_widens_with_loss": wins_widen,
+            "lossiest_cell_replays_bitwise": replay}
+
+
 VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "paper-fig1": _fig1,
     "paper-fig3": _fig3,
@@ -515,10 +593,29 @@ VALIDATORS: Dict[str, Callable[[Sequence[Dict]], Check]] = {
     "compression": _compression,
     "churn": _churn,
     "fabric": _fabric,
+    "wan": _wan,
 }
 
 
 def validate(grid_name: str, cells: Sequence[Dict]) -> Check:
+    # a hardened sweep records retry-exhausted cells as {"failed": true,
+    # ...} instead of aborting; validators see only the completed cells,
+    # and the degradation itself lands as an always-False check so compare
+    # flags the artifact rather than trusting partial claims.  Complete
+    # sweeps (every golden) never hit this branch, so their validation
+    # dicts — and hashes — are untouched.
+    ok = [c for c in cells if not c.get("failed")]
     fn = VALIDATORS.get(grid_name)
-    # bool() strips numpy bool scalars, which are not JSON serializable
-    return {k: bool(v) for k, v in fn(cells).items()} if fn else {}
+    degraded = len(ok) != len(cells)
+    try:
+        # bool() strips numpy bool scalars, which are not JSON serializable
+        out = {k: bool(v) for k, v in fn(ok).items()} if fn else {}
+    except Exception:
+        # a validator indexing a twin cell that failed: only tolerable on
+        # a degraded sweep — on a complete one it is a real bug
+        if not degraded:
+            raise
+        out = {"validator_completed": False}
+    if degraded:
+        out["no_failed_cells"] = False
+    return out

@@ -7,11 +7,22 @@ and per-token decode latency/throughput.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --prompt-len 64 --gen 16 --batch 4
+
+``--serve`` wraps the generate step in a stdlib HTTP front end (the seed
+idiom for the ROADMAP sweep-server item): ``GET /healthz`` is the
+readiness probe, ``POST /run`` executes one request under a per-request
+wall-clock budget (504 on expiry), and SIGTERM triggers a graceful drain
+— the probe flips to 503, in-flight requests finish, then the listener
+exits.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import signal
+import threading
 import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +85,147 @@ def run(args) -> dict:
     return result
 
 
+# ---------------------------------------------------------------------------
+# HTTP front end: readiness probe, per-request timeout, graceful drain
+# ---------------------------------------------------------------------------
+
+class ServeFrontend:
+    """stdlib HTTP wrapper around a request handler callable.
+
+    ``handler(payload: dict) -> dict`` runs on a worker thread per
+    request; a request that blows ``request_timeout`` seconds gets a 504
+    (the worker is abandoned to finish in the background — stdlib threads
+    cannot be recalled, which is exactly why the probe exists).  Routes:
+
+    - ``GET /healthz``  -> 200 ``{"status": "ok"}`` while serving,
+      503 ``{"status": "draining"}`` once a drain began (load balancers
+      stop routing here *before* the listener dies);
+    - ``POST /run``     -> the handler's JSON result; 503 while
+      draining, 504 on timeout, 500 on handler exceptions.
+
+    :meth:`drain` is the graceful shutdown: flip the probe, wait up to
+    ``grace`` seconds for in-flight requests, stop the listener.
+    """
+
+    def __init__(self, handler, *, request_timeout: float = 30.0,
+                 host: str = "127.0.0.1", port: int = 0,
+                 grace: float = 10.0):
+        self.handler = handler
+        self.request_timeout = request_timeout
+        self.grace = grace
+        self.draining = threading.Event()
+        self._inflight = 0
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self.httpd = ThreadingHTTPServer((host, port), self._make_handler())
+        self.httpd.daemon_threads = True
+
+    @property
+    def port(self) -> int:
+        return self.httpd.server_address[1]
+
+    def _make_handler(self):
+        front = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *a):  # quiet: the probe polls
+                pass
+
+            def _reply(self, code: int, body: dict):
+                data = json.dumps(body).encode()
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+
+            def do_GET(self):
+                if self.path != "/healthz":
+                    return self._reply(404, {"error": "unknown route"})
+                if front.draining.is_set():
+                    return self._reply(503, {"status": "draining"})
+                return self._reply(200, {"status": "ok"})
+
+            def do_POST(self):
+                if self.path != "/run":
+                    return self._reply(404, {"error": "unknown route"})
+                if front.draining.is_set():
+                    return self._reply(503, {"status": "draining"})
+                n = int(self.headers.get("Content-Length") or 0)
+                try:
+                    payload = json.loads(self.rfile.read(n) or b"{}")
+                except json.JSONDecodeError as e:
+                    return self._reply(400, {"error": f"bad json: {e}"})
+                with front._lock:
+                    front._inflight += 1
+                try:
+                    box: dict = {}
+
+                    def work():
+                        try:
+                            box["result"] = front.handler(payload)
+                        except Exception as e:  # noqa: BLE001
+                            box["error"] = f"{type(e).__name__}: {e}"
+
+                    t = threading.Thread(target=work, daemon=True)
+                    t.start()
+                    t.join(front.request_timeout)
+                    if t.is_alive():
+                        return self._reply(504, {
+                            "error": f"request exceeded "
+                                     f"{front.request_timeout}s"})
+                    if "error" in box:
+                        return self._reply(500, {"error": box["error"]})
+                    return self._reply(200, box["result"])
+                finally:
+                    with front._idle:
+                        front._inflight -= 1
+                        front._idle.notify_all()
+
+        return Handler
+
+    def serve_forever(self):
+        self.httpd.serve_forever(poll_interval=0.1)
+
+    def drain(self):
+        """Graceful shutdown: refuse new work, wait for in-flight
+        requests (bounded by ``grace``), stop the listener."""
+        self.draining.set()
+        deadline = time.monotonic() + self.grace
+        with self._idle:
+            while self._inflight > 0:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    break
+                self._idle.wait(left)
+        self.httpd.shutdown()
+        self.httpd.server_close()  # refuse, don't hang, new connections
+
+    def install_sigterm(self):
+        signal.signal(signal.SIGTERM,
+                      lambda *_: threading.Thread(target=self.drain,
+                                                  daemon=True).start())
+
+
+def serve(args) -> None:
+    """Blocking HTTP mode: each POST /run re-runs the generate step with
+    per-request overrides for the small knobs (batch/prompt_len/gen)."""
+
+    def handle(payload: dict) -> dict:
+        ns = argparse.Namespace(**vars(args))
+        for k in ("batch", "prompt_len", "gen"):
+            if k in payload:
+                setattr(ns, k, int(payload[k]))
+        return run(ns)
+
+    front = ServeFrontend(handle, request_timeout=args.request_timeout,
+                          port=args.port, grace=args.grace)
+    front.install_sigterm()
+    print(f"[serve] listening on :{front.port} "
+          f"(healthz probe, {args.request_timeout}s/request)")
+    front.serve_forever()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
@@ -82,7 +234,18 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serve", action="store_true",
+                    help="HTTP mode: /healthz probe + /run endpoint")
+    ap.add_argument("--port", type=int, default=0,
+                    help="HTTP port (0 = ephemeral)")
+    ap.add_argument("--request-timeout", type=float, default=30.0,
+                    dest="request_timeout",
+                    help="per-request wall-clock budget (504 past it)")
+    ap.add_argument("--grace", type=float, default=10.0,
+                    help="drain budget on SIGTERM before the listener stops")
     args = ap.parse_args(argv)
+    if args.serve:
+        return serve(args)
     return run(args)
 
 

@@ -1,0 +1,172 @@
+"""Hardened sweep runner: crash-safe journal, resume byte-identity,
+per-cell timeout/retry, graceful degradation of retry-exhausted cells,
+atomic artifact writes, and compare's skip-and-report on failed cells."""
+import json
+
+import pytest
+
+from repro.experiments import artifacts
+from repro.experiments.compare import compare
+from repro.experiments.runner import (_load_journal, run_cell, run_spec,
+                                      run_suite)
+from repro.experiments.spec import Cell, ExperimentSpec
+
+TINY = ExperimentSpec(name="tiny-hardening", models=("resnet50",),
+                      n_servers=(2,), bandwidth_gbps=(10.0,),
+                      transport=("ideal",), scheduler=("fifo", "priority"))
+
+# a grid whose second model cannot be built: the failure-injection vehicle
+BROKEN = ExperimentSpec(name="tiny-broken",
+                        models=("resnet50", "no-such-model"),
+                        n_servers=(2,), bandwidth_gbps=(10.0,),
+                        transport=("ideal",))
+
+
+def test_hardened_serial_matches_default_bytewise(tmp_path):
+    plain = run_spec(TINY, executor="serial")
+    hard = run_spec(TINY, executor="serial", retries=2,
+                    journal=tmp_path / "j.jsonl")
+    assert json.dumps(plain, sort_keys=True) == \
+        json.dumps(hard, sort_keys=True)
+
+
+def test_journal_written_and_replayable(tmp_path):
+    j = tmp_path / "tiny.jsonl"
+    rec = run_spec(TINY, executor="serial", journal=j)
+    lines = j.read_text().splitlines()
+    head = json.loads(lines[0])
+    assert head["kind"] == "repro-journal"
+    assert head["spec_hash"] == TINY.spec_hash()
+    assert len(lines) == 1 + len(rec["cells"])
+    done = _load_journal(j, TINY)
+    assert [done[i] for i in range(len(rec["cells"]))] == rec["cells"]
+
+
+def test_resume_is_byte_identical_after_partial_journal(tmp_path):
+    """The SIGKILL contract: keep the journal's prefix (plus a torn tail
+    line, the crash boundary) and --resume must reproduce the single-shot
+    artifact byte for byte."""
+    j = tmp_path / "tiny.jsonl"
+    single = run_spec(TINY, executor="serial", journal=j)
+    lines = j.read_text().splitlines(keepends=True)
+    # crash after the first completed cell, mid-write of the second
+    (tmp_path / "tiny.jsonl").write_text(
+        "".join(lines[:2]) + lines[2][: len(lines[2]) // 2])
+    resumed = run_spec(TINY, executor="serial", journal=j, resume=True)
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    artifacts.write(a, [single])
+    artifacts.write(b, [resumed])
+    assert a.read_bytes() == b.read_bytes()
+
+
+def test_resume_reruns_failed_cells(tmp_path):
+    j = tmp_path / "tiny.jsonl"
+    run_spec(TINY, executor="serial", journal=j)
+    lines = j.read_text().splitlines(keepends=True)
+    # rewrite cell 0's entry as a failure record: resume must re-run it
+    e = json.loads(lines[1])
+    e["cell"] = {**Cell.from_dict(e["cell"]).to_dict(),
+                 "failed": True, "error": "injected"}
+    (tmp_path / "tiny.jsonl").write_text(
+        lines[0] + json.dumps(e) + "\n" + "".join(lines[2:]))
+    resumed = run_spec(TINY, executor="serial", journal=j, resume=True)
+    assert not any(c.get("failed") for c in resumed["cells"])
+
+
+def test_resume_refuses_foreign_journal(tmp_path):
+    j = tmp_path / "other.jsonl"
+    run_spec(BROKEN, executor="serial", journal=j, retries=0)
+    with pytest.raises(ValueError, match="refusing to resume"):
+        run_spec(TINY, executor="serial", journal=j, resume=True)
+
+
+def test_retry_exhaustion_degrades_gracefully():
+    """A cell that always raises is recorded with failure metadata; the
+    sweep completes and the validations flag the degradation."""
+    rec = run_spec(BROKEN, executor="serial", retries=1)
+    ok = [c for c in rec["cells"] if not c.get("failed")]
+    bad = [c for c in rec["cells"] if c.get("failed")]
+    assert len(ok) == 1 and len(bad) == 1
+    assert bad[0]["model"] == "no-such-model" and "error" in bad[0]
+    assert rec["validations"]["no_failed_cells"] is False
+
+
+def test_hardened_process_pool_completes(tmp_path):
+    """The process path with a generous timeout must agree with the
+    serial single-shot run byte for byte."""
+    plain = run_spec(TINY, executor="serial")
+    hard = run_spec(TINY, executor="process", cell_timeout=300.0, retries=1,
+                    journal=tmp_path / "j.jsonl")
+    assert json.dumps(plain, sort_keys=True) == \
+        json.dumps(hard, sort_keys=True)
+
+
+def test_process_timeout_degrades_gracefully():
+    """An absurdly small per-cell budget: every charged cell eventually
+    exhausts its retries, the sweep still completes with every cell
+    recorded (done or failed), and nothing raises."""
+    rec = run_spec(TINY, executor="process", cell_timeout=1e-4, retries=0)
+    assert len(rec["cells"]) == TINY.n_cells
+    for c in rec["cells"]:
+        assert c.get("failed") or "t_sync" in c
+
+
+def test_run_suite_journal_dir(tmp_path):
+    out = run_suite([TINY], journal_dir=tmp_path / "journals")
+    assert (tmp_path / "journals" / "tiny-hardening.jsonl").exists()
+    assert len(out) == 1 and len(out[0]["cells"]) == TINY.n_cells
+
+
+# ---------------------------------------------------------------------------
+# atomic artifact writes
+# ---------------------------------------------------------------------------
+
+def test_artifact_write_is_atomic(tmp_path):
+    p = tmp_path / "art.json"
+    artifacts.write(p, [{"name": "x", "cells": []}])
+    artifacts.write(p, [{"name": "y", "cells": []}])  # overwrite in place
+    assert artifacts.read(p)["experiments"][0]["name"] == "y"
+    # no temp debris left behind in the directory
+    assert [f.name for f in tmp_path.iterdir()] == ["art.json"]
+
+
+def test_artifact_write_failure_leaves_no_partial(tmp_path):
+    p = tmp_path / "art.json"
+    artifacts.write(p, [{"name": "x", "cells": []}])
+    before = p.read_bytes()
+    with pytest.raises(TypeError):
+        artifacts.write(p, [{"bad": object()}])  # not JSON-serializable
+    assert p.read_bytes() == before
+    assert [f.name for f in tmp_path.iterdir()] == ["art.json"]
+
+
+# ---------------------------------------------------------------------------
+# compare: failed cells are skip-and-report, not crashes
+# ---------------------------------------------------------------------------
+
+def _art(cells, validations=None):
+    return {"kind": "repro-experiment-artifact", "schema_version": 1,
+            "experiments": [{"name": "tiny-hardening",
+                             "spec_hash": TINY.spec_hash(),
+                             "cells": cells,
+                             "validations": validations or {}}]}
+
+
+def test_compare_flags_new_side_failure():
+    cells = [run_cell(TINY, c) for c in TINY.expand()]
+    broken = [dict(cells[0]), {**Cell.from_dict(cells[1]).to_dict(),
+                               "failed": True, "error": "boom"}]
+    report = compare(_art(cells), _art(broken))
+    assert not report.ok
+    assert any("failed in new artifact" in v.detail
+               for v in report.violations)
+
+
+def test_compare_skips_and_reports_old_side_failure():
+    cells = [run_cell(TINY, c) for c in TINY.expand()]
+    broken = [dict(cells[0]), {**Cell.from_dict(cells[1]).to_dict(),
+                               "failed": True, "error": "boom"}]
+    report = compare(_art(broken), _art(cells))
+    assert report.ok
+    assert any("old-side cell failed" in n for n in report.notes)

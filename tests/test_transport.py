@@ -1,0 +1,247 @@
+"""Lossy-link transport layer: parsing, deterministic pricing, seeded
+retransmission draws, and the bitwise contracts (null bypass, loss=0 ==
+pre-transport build, tuple/columnar and replay bit-identity, stall-detector
+headroom under dense _RETX calendars)."""
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import events as ev
+from repro.core.events import ChurnEvent, FlowSpec, run_flows
+from repro.core.schedule import _apply_link, _apply_link_batch
+from repro.core.simulator import simulate, simulate_contention
+from repro.core.timeline import from_cnn
+from repro.core.transport import (GBPS, NULL_LINK, LinkProfile,
+                                  parse_link_profile, retx_events)
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_link_profile():
+    assert parse_link_profile("none") == NULL_LINK
+    assert parse_link_profile("") == NULL_LINK
+    assert parse_link_profile(None) == NULL_LINK
+    lp = LinkProfile(loss=0.3)
+    assert parse_link_profile(lp) is lp
+    lp = parse_link_profile("wan:loss=0.01,rtt=20")
+    assert lp.loss == 0.01 and lp.rtt == 0.02
+    assert lp.timeout == 0.2 and lp.backoff == 2.0 and lp.segment == 64e3
+    lp = parse_link_profile("wan:loss=0.05,rtt=80:timeout=100,backoff=4")
+    assert lp.timeout == 0.1 and lp.backoff == 4.0 and lp.rtt == 0.08
+    # section separators are cosmetic: any pair may appear in any section
+    assert parse_link_profile("wan:loss=0.05:rtt=80") == \
+        parse_link_profile("wan:loss=0.05,rtt=80")
+
+
+def test_parse_link_profile_errors():
+    with pytest.raises(ValueError, match="unknown link profile"):
+        parse_link_profile("lan:loss=0.1")
+    with pytest.raises(ValueError, match="unknown link profile"):
+        parse_link_profile("wan")
+    with pytest.raises(ValueError, match="not key=value"):
+        parse_link_profile("wan:loss")
+    with pytest.raises(ValueError, match="non-numeric"):
+        parse_link_profile("wan:loss=lots")
+    with pytest.raises(ValueError, match="unknown link profile field"):
+        parse_link_profile("wan:loss=0.1,mtu=1500")
+    with pytest.raises(ValueError, match=r"loss must be in \[0, 1\)"):
+        parse_link_profile("wan:loss=1.0")
+
+
+def test_null_detection():
+    assert NULL_LINK.is_null
+    assert parse_link_profile("wan:loss=0,rtt=0").is_null
+    assert not parse_link_profile("wan:loss=0.01,rtt=0").is_null
+    assert not parse_link_profile("wan:loss=0,rtt=5").is_null
+
+
+# ---------------------------------------------------------------------------
+# deterministic pricing in the lowering
+# ---------------------------------------------------------------------------
+
+def _flows():
+    return [FlowSpec(op_id=i, ready=0.1 * i, work=1e-3 * (i + 1),
+                     latency=1e-4, duration=1e-3 * (i + 1) + 1e-4)
+            for i in range(4)]
+
+
+def test_apply_link_null_is_same_object():
+    flows = _flows()
+    assert _apply_link(flows, None) is flows
+    assert _apply_link(flows, NULL_LINK) is flows
+
+
+def test_apply_link_prices_inflation_and_rtt():
+    lp = parse_link_profile("wan:loss=0.2,rtt=50")
+    out = _apply_link(_flows(), lp)
+    for f0, f1 in zip(_flows(), out):
+        assert f1.work == f0.work / 0.8
+        assert f1.latency == f0.latency + 0.05
+        # duration uses the same float association as the batch path
+        assert f1.duration == f0.duration + (f1.work - f0.work) + 0.05
+        assert f1.ready == f0.ready and f1.priority == f0.priority
+
+
+def test_apply_link_batch_matches_tuple_path_bitwise():
+    from repro.core.events import FlowBatch
+    lp = parse_link_profile("wan:loss=0.13,rtt=7")
+    flows = _flows()
+    a = FlowBatch.from_flows(_apply_link(flows, lp))
+    b = _apply_link_batch(FlowBatch.from_flows(flows), lp)
+    assert np.array_equal(a.work, b.work)
+    assert np.array_equal(a.latency, b.latency)
+    assert np.array_equal(a.duration, b.duration)
+
+
+# ---------------------------------------------------------------------------
+# seeded retransmission draws
+# ---------------------------------------------------------------------------
+
+_LP = parse_link_profile("wan:loss=0.05,rtt=20")
+
+
+def test_retx_events_deterministic():
+    a = retx_events(_LP, 100e6, 0.5, seed=7, stream=3)
+    b = retx_events(_LP, 100e6, 0.5, seed=7, stream=3)
+    assert a == b and len(a) > 0
+    assert retx_events(_LP, 100e6, 0.5, seed=8, stream=3) != a
+    assert retx_events(_LP, 100e6, 0.5, seed=7, stream=4) != a
+
+
+def test_retx_events_empty_cases():
+    assert retx_events(NULL_LINK, 100e6, 0.5) == []
+    assert retx_events(_LP, 0.0, 0.5) == []
+    assert retx_events(_LP, 100e6, 0.0) == []
+
+
+def test_retx_events_shape():
+    evs = retx_events(_LP, 100e6, 0.5, seed=7, job="job3")
+    assert all(e.kind == "retx" and e.job == "job3" and e.worker == -1
+               for e in evs)
+    assert all(0.0 <= e.t <= 0.5 for e in evs)
+    assert [e.t for e in evs] == sorted(e.t for e in evs)
+    # stalls are timeout * backoff**k for integer k in [0, 6]
+    for e in evs:
+        k = math.log(e.stall / _LP.timeout) / math.log(_LP.backoff)
+        assert abs(k - round(k)) < 1e-9 and 0 <= round(k) <= 6
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       lo=st.sampled_from([0.001, 0.005, 0.01]),
+       hi=st.sampled_from([0.02, 0.05, 0.1]))
+def test_retx_loss_superset_property(seed, lo, hi):
+    """Raising the loss axis keeps a superset of the same timed events —
+    the thinning-gate construction the monotonicity validators rely on."""
+    a = retx_events(LinkProfile(loss=lo, rtt=0.02), 100e6, 0.5, seed=seed)
+    b = retx_events(LinkProfile(loss=hi, rtt=0.02), 100e6, 0.5, seed=seed)
+    assert {e.t for e in a} <= {e.t for e in b}
+
+
+def test_retx_backoff_scales_stalls_without_moving_events():
+    base = parse_link_profile("wan:loss=0.05,rtt=20:timeout=100,backoff=1")
+    quad = parse_link_profile("wan:loss=0.05,rtt=20:timeout=100,backoff=4")
+    a = retx_events(base, 100e6, 0.5, seed=2029)
+    b = retx_events(quad, 100e6, 0.5, seed=2029)
+    assert [e.t for e in a] == [e.t for e in b]
+    assert all(x.stall <= y.stall for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bitwise contracts
+# ---------------------------------------------------------------------------
+
+_TL = from_cnn("resnet50")
+_KW = dict(n_workers=64, bandwidth=10 * GBPS, transport="horovod_tcp",
+           scheduler="priority", n_chunks=8, fault_seed=2029)
+
+
+def test_zero_loss_is_bitwise_pre_transport():
+    base = simulate(_TL, **_KW)
+    for spec in ("none", "", "wan:loss=0,rtt=0"):
+        r = simulate(_TL, **_KW, link_profile=spec)
+        assert r.t_sync == base.t_sync
+        assert r.t_overhead == base.t_overhead
+        assert r.effective_bw == base.effective_bw
+
+
+def test_lossy_replay_is_bitwise(monkeypatch):
+    lp = "wan:loss=0.01,rtt=20"
+    a = simulate(_TL, **_KW, link_profile=lp)
+    b = simulate(_TL, **_KW, link_profile=lp)
+    assert a.t_sync == b.t_sync
+    # tuple vs columnar lowering
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "0")
+    c = simulate(_TL, **_KW, link_profile=lp)
+    assert c.t_sync == a.t_sync
+
+
+def test_rtt_only_profile_prices_on_fast_path(monkeypatch):
+    """An rtt-only profile draws no retx events, so the fifo closed form
+    stays eligible — and must agree with the event engine bitwise."""
+    kw = dict(_KW, scheduler="fifo")
+    a = simulate(_TL, **kw, link_profile="wan:loss=0,rtt=20")
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "0")
+    b = simulate(_TL, **kw, link_profile="wan:loss=0,rtt=20")
+    assert a.t_sync == b.t_sync
+    base = simulate(_TL, **kw)
+    assert a.t_sync > base.t_sync
+
+
+def test_contention_per_job_retx_bitwise(monkeypatch):
+    lp = "wan:loss=0.01,rtt=20"
+    tls = [_TL, from_cnn("vgg16")]
+    kw = dict(_KW)
+    a = [r.t_sync for r in simulate_contention(tls, **kw, link_profile=lp)]
+    monkeypatch.setenv("REPRO_SIM_FASTPATH", "0")
+    b = [r.t_sync for r in simulate_contention(tls, **kw, link_profile=lp)]
+    assert a == b
+    # solo contention degenerates to plain simulate under the same draws
+    solo = simulate_contention([_TL], **kw, link_profile=lp)[0]
+    assert solo.t_sync == simulate(_TL, **kw, link_profile=lp).t_sync
+
+
+def test_t_sync_monotone_in_loss():
+    ladder = ("none", "wan:loss=0.001,rtt=20", "wan:loss=0.01,rtt=20",
+              "wan:loss=0.05,rtt=20")
+    ts = [simulate(_TL, **_KW, link_profile=p).t_sync for p in ladder]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# stall-detector regression: dense _RETX calendars with long stalls
+# ---------------------------------------------------------------------------
+
+def test_stall_detector_headroom_under_dense_retx():
+    """A calendar dense with retx stalls commits zero work while each
+    stall is pending; the progress-based stall detector must count those
+    calendar entries as expected idle wakeups, not runaway looping.
+    Regression for the pre-audit limit, which was tuned for fault-free
+    calendars."""
+    n = 40
+    flows = [FlowSpec(op_id=i, ready=0.0, work=1e-3, latency=0.0)
+             for i in range(n)]
+    # several long-backoff stalls per flow, all targeting the same job
+    churn = [ChurnEvent(1e-4 * i, "job0", "retx", -1, 0.05 * (1 + i % 4))
+             for i in range(3 * n)]
+    res = run_flows(flows, churn=churn)  # must not RuntimeError
+    assert len(res) == n
+    assert all(r.end >= r.start for r in res)
+    # the same flows with no churn finish strictly earlier
+    base = run_flows(flows)
+    assert max(r.end for r in res) > max(r.end for r in base)
+
+
+def test_stall_limit_counts_retx_entries():
+    """The audit's contract, pinned structurally: _RETX calendar entries
+    widen the stall budget exactly like _FAULT entries."""
+    assert ev._RETX == 3 and ev._FAULT == 1
+    cal = [(0.0, ev._DONE, 0, None, None),
+           (0.0, ev._FAULT, 1, None, None),
+           (0.0, ev._RETX, 2, None, None)]
+    n_faults = sum(1 for e in cal if e[1] == ev._FAULT or e[1] == ev._RETX)
+    assert n_faults == 2

@@ -70,7 +70,12 @@ def _code_snippets(text: str) -> List[str]:
             in_fence = not in_fence
             continue
         if in_fence:
-            out.append(line.split(" #")[0].strip())
+            stripped = line.split(" #")[0].strip()
+            # shell continuations: fold `cmd \` + its next line(s) into one
+            if out and out[-1].endswith("\\"):
+                out[-1] = out[-1][:-1].rstrip() + " " + stripped
+            else:
+                out.append(stripped)
         else:
             prose.append(line)
     for m in _INLINE_RE.finditer("\n".join(prose)):
